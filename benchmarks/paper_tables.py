@@ -1,0 +1,191 @@
+"""One benchmark per paper table/figure, driven by the TriMoE simulator.
+
+Every function prints ``name,us_per_call,derived`` CSV rows and returns a
+dict for EXPERIMENTS.md. "us_per_call" is the simulated MoE-layer decode
+latency (paper's core metric); "derived" is the figure's headline number
+(speedup / utilization / overhead).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.configs import SIM_WORKLOADS, get_config
+from repro.core.simulator import SimFlags, simulate
+from repro.core.tiers import tier_stats
+from repro.core.traces import TraceSpec, generate_trace
+
+BASELINES = ("klotski", "enkt", "monde")
+STEPS = 8
+
+
+def _row(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def _moe_layer_us(r):
+    cfg_layers = r.moe_time / (r.n_steps)
+    return 1e6 * cfg_layers
+
+
+def fig6_decode_speedup(batches=(256, 512, 768)) -> Dict:
+    """Fig. 6: MoE decode speedup over the best SOTA baseline."""
+    out = {}
+    for name in SIM_WORKLOADS:
+        cfg = get_config(name)
+        for bs in batches:
+            rs = {p: simulate(cfg, bs, policy=p, n_steps=STEPS)
+                  for p in BASELINES + ("trimoe",)}
+            best = min(rs[p].moe_time for p in BASELINES)
+            sp = best / rs["trimoe"].moe_time
+            sp_klotski = rs["klotski"].moe_time / rs["trimoe"].moe_time
+            out[(name, bs)] = {
+                "speedup_vs_best": sp,
+                "speedup_vs_klotski": sp_klotski,
+                "best_baseline": min(BASELINES, key=lambda p: rs[p].moe_time),
+            }
+            _row(f"fig6/{name}/bs{bs}", _moe_layer_us(rs["trimoe"]),
+                 f"decode_speedup_vs_best={sp:.2f}x")
+    vals = [v["speedup_vs_best"] for v in out.values()]
+    _row("fig6/summary", 0, f"range={min(vals):.2f}-{max(vals):.2f}x (paper 2.12-2.83x)")
+    out["range"] = (min(vals), max(vals))
+    return out
+
+
+def fig7_e2e_throughput(batches=(512,)) -> Dict:
+    """Fig. 7: end-to-end decode throughput over the best baseline."""
+    out = {}
+    for name in SIM_WORKLOADS:
+        cfg = get_config(name)
+        for bs in batches:
+            rs = {p: simulate(cfg, bs, policy=p, n_steps=STEPS)
+                  for p in BASELINES + ("trimoe",)}
+            best = max(rs[p].throughput for p in BASELINES)
+            sp = rs["trimoe"].throughput / best
+            out[(name, bs)] = sp
+            _row(f"fig7/{name}/bs{bs}",
+                 1e6 * rs["trimoe"].step_time / rs["trimoe"].n_steps,
+                 f"e2e_speedup={sp:.2f}x tput={rs['trimoe'].throughput:.0f}tok/s")
+    vals = list(out.values())
+    _row("fig7/summary", 0, f"range={min(vals):.2f}-{max(vals):.2f}x (paper 2.09-2.78x)")
+    out["range"] = (min(vals), max(vals))
+    return out
+
+
+def fig8_ablation(batch=512) -> Dict:
+    """Fig. 8: component ablation from a GPU-NDP base at batch 512."""
+    cfg = get_config("deepseek-v2-236b")
+    base = simulate(cfg, batch, policy="gpu_ndp", n_steps=STEPS)
+    cpu = simulate(cfg, batch, flags=SimFlags(
+        policy="trimoe", enable_refinement=False, enable_relayout=False),
+        n_steps=STEPS)
+    ref = simulate(cfg, batch, flags=SimFlags(
+        policy="trimoe", enable_refinement=True, enable_relayout=False),
+        n_steps=STEPS)
+    rel = simulate(cfg, batch, flags=SimFlags(
+        policy="trimoe", enable_refinement=True, enable_relayout=True),
+        n_steps=STEPS)
+    gains = {
+        "+CPU": base.moe_time / cpu.moe_time,
+        "+Refinement": cpu.moe_time / ref.moe_time,
+        "+Relayout": ref.moe_time / rel.moe_time,
+    }
+    paper = {"+CPU": 1.75, "+Refinement": 1.28, "+Relayout": 1.16}
+    for k, v in gains.items():
+        _row(f"fig8/{k}", _moe_layer_us(rel), f"gain={v:.2f}x (paper {paper[k]}x)")
+    return gains
+
+
+def fig9_sensitivity() -> Dict:
+    """Fig. 9: NDP count and CPU-TFLOPS sweeps."""
+    cfg = get_config("deepseek-v2-236b")
+    out = {"ndp": {}, "cpu": {}}
+    for nd in (4, 8, 16, 32):
+        r = simulate(cfg, 512, flags=SimFlags(policy="trimoe", n_dimms=nd),
+                     n_steps=4)
+        out["ndp"][nd] = r.moe_time
+        _row(f"fig9a/ndp{nd}", _moe_layer_us(r), f"moe_time={r.moe_time:.3f}s")
+    for s in (0.125, 0.25, 0.5, 1.0, 2.0):
+        r = simulate(cfg, 512, flags=SimFlags(policy="trimoe", cpu_flops_scale=s),
+                     n_steps=4)
+        out["cpu"][s] = r.moe_time
+        _row(f"fig9b/cpu{s}x", _moe_layer_us(r), f"moe_time={r.moe_time:.3f}s")
+    sat = out["ndp"][16] / out["ndp"][32]
+    flat = out["cpu"][0.5] / out["cpu"][2.0]
+    _row("fig9/summary", 0,
+         f"ndp16->32 gain {sat:.2f}x (paper: stabilizes at 16); "
+         f"cpu0.5->2x gain {flat:.2f}x (paper: flattens at 0.5x)")
+    return out
+
+
+def table3_utilization(batch=512) -> Dict:
+    """Table 3: per-domain compute utilization."""
+    cfg = get_config("deepseek-v2-236b")
+    out = {}
+    for p in BASELINES + ("trimoe",):
+        r = simulate(cfg, batch, policy=p, n_steps=STEPS)
+        out[p] = r.utils
+        u = r.utils
+        _row(f"table3/{p}", _moe_layer_us(r),
+             f"gpu={u['gpu']:.2f} cpu={u['cpu']:.2f} ndp={u['ndp']:.2f}")
+    return out
+
+
+def robustness_and_overhead() -> Dict:
+    """§5.5: small-batch robustness (Qwen) + migration overhead."""
+    cfg = get_config("qwen3-235b-a22b")
+    out = {}
+    for bs in (32, 64, 128):
+        rs = {p: simulate(cfg, bs, policy=p, n_steps=STEPS)
+              for p in BASELINES + ("trimoe",)}
+        best = min(rs[p].moe_time for p in BASELINES)
+        sp = best / rs["trimoe"].moe_time
+        out[bs] = sp
+        _row(f"robustness/bs{bs}", _moe_layer_us(rs["trimoe"]),
+             f"speedup={sp:.2f}x")
+    r = simulate(get_config("deepseek-v2-236b"), 512, policy="trimoe",
+                 n_steps=STEPS)
+    ovh = r.migration_overhead / r.step_time
+    out["overhead"] = ovh
+    out["predictor"] = r.migration_accuracy
+    _row("overhead/migration", 1e6 * r.migration_overhead / r.n_steps,
+         f"frac={100*ovh:.2f}% (paper <3.3%)")
+    _row("overhead/predictor", 0,
+         f"migration_acc={r.migration_accuracy:.2f} (paper >0.78) "
+         f"metadata_kb={r.predictor_bytes/1e3:.1f} (paper 38KB)")
+    return out
+
+
+def fig3_traces() -> Dict:
+    """Fig. 3: activation heterogeneity of the synthesized traces."""
+    spec = TraceSpec(n_steps=32, n_layers=8, n_experts=160, top_k=6,
+                     tokens_per_step=512)
+    tr = generate_trace(spec)
+    st = tier_stats(tr.reshape(-1, 160))
+    _row("fig3/marginals", 0,
+         f"cold={st['cold_expert_frac']:.2f}exp/{st['cold_token_frac']:.2f}tok "
+         f"warm={st['warm_expert_frac']:.2f}/{st['warm_token_frac']:.2f} "
+         f"hot={st['hot_expert_frac']:.2f}/{st['hot_token_frac']:.2f} "
+         f"(paper: ~0.70/0.08, 0.2-0.4/<=0.70)")
+    return st
+
+
+def fig5_costmodel() -> Dict:
+    """Fig. 5: compute characterization anchors."""
+    from repro.core.cost_model import CostModel, ExpertShape, STRIPED
+
+    cm = CostModel()
+    sh = ExpertShape(5120, 1536)
+    rows = {}
+    for tokens in (1, 8, 64, 256, 1024):
+        g = cm.t_gpu_hit(sh, tokens)
+        c = cm.t_cpu(sh, tokens, STRIPED)
+        n = cm.t_ndp(sh, tokens)
+        rows[tokens] = (g, c, n)
+        best = min(("gpu", g), ("cpu", c), ("ndp", n), key=lambda kv: kv[1])[0]
+        _row(f"fig5/L{tokens}", 1e6 * min(g, c, n),
+             f"gpu={1e6*g:.0f}us cpu={1e6*c:.0f}us ndp={1e6*n:.0f}us best={best}")
+    util = sh.flops(256) / (cm.t_gpu_hit(sh, 256) * cm.hw.gpu_flops)
+    _row("fig5/anchor", 0, f"gpu_util@256tok={util:.2f} (paper 0.30)")
+    return rows

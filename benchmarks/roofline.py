@@ -1,0 +1,332 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+XLA's ``cost_analysis()`` counts a ``while`` body ONCE, so our
+scan-over-layers design (deliberate: it keeps 512-device compiles
+tractable) undercounts FLOPs/collective bytes by the trip count. This
+module re-derives both scan-aware:
+
+  * parse the optimized HLO into computations;
+  * find while loops + their trip counts (induction-variable compare
+    against a constant in the condition computation);
+  * attribute every dot/collective to its computation, multiplying by the
+    product of enclosing trip counts (fusion computations inherit the
+    multiplier of their caller).
+
+Roofline terms per (arch x shape x mesh), TPU v5e constants:
+  compute    = FLOPs / (chips * 197e12)
+  memory     = HBM traffic / (chips * 819e9)
+               traffic ~ arguments + outputs + 2 x temp (memory_analysis
+               buffers; documented approximation)
+  collective = wire bytes / (chips * 2 links * 50e9)
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.hardware import TPU_V5E
+
+DT_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2, "u16": 2,
+}
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+CALL_RE = re.compile(r"(?:to_apply|calls|body|condition|branch_computations)="
+                     r"[{]?%?([\w.\-]+)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in SHAPE_RE.findall(text):
+        if dt not in DT_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DT_BYTES[dt]
+    return total
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: List[str] = field(default_factory=list)
+    flops: float = 0.0
+    coll: Dict[str, float] = field(default_factory=dict)
+    calls: List[tuple] = field(default_factory=list)  # (callee, kind)
+    trip: int = 1  # for while bodies
+
+
+def parse_hlo(text: str):
+    """Split the optimized HLO module into computations.
+
+    Computation definitions start at column 0 (``%name (...`` or
+    ``ENTRY ...``); instructions are indented; the closing ``}`` returns
+    to column 0. Multi-line headers are tolerated (continuations carry no
+    ``= ``)."""
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        if raw and not raw.startswith(" "):
+            if raw.startswith("ENTRY") or raw.startswith("%"):
+                m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", raw)
+                if m:
+                    cur = Computation(m.group(1))
+                    comps[cur.name] = cur
+                    if raw.startswith("ENTRY"):
+                        entry = cur.name
+                continue
+            if raw.startswith("}"):
+                cur = None
+            continue
+        s = raw.strip()
+        if cur is not None and "= " in s:
+            cur.lines.append(s)
+    return comps, entry
+
+
+def _dot_flops(line: str, symbols: Dict[str, List[int]]) -> float:
+    """FLOPs of a dot: 2 * prod(result dims) * contraction size.
+
+    Operands are SSA names; their dims come from the per-computation
+    symbol table (every instruction line defines `%name = type[dims] ...`).
+    """
+    rhs = line.split("= ", 1)[1]
+    shapes = SHAPE_RE.findall(rhs.split("dot(")[0])
+    if not shapes:
+        return 0.0
+    res_dims = [int(d) for d in shapes[0][1].split(",") if d] or [1]
+    m = re.search(r"dot\(([^)]*)\)", rhs)
+    lhs_dims: Optional[List[int]] = None
+    if m is not None:
+        first_op = m.group(1).split(",")[0].strip().lstrip("%")
+        lhs_dims = symbols.get(first_op)
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+    contraction = 1
+    if cm and lhs_dims:
+        for idx in cm.group(1).split(","):
+            if idx:
+                contraction *= lhs_dims[int(idx)]
+    return 2.0 * float(np.prod(res_dims)) * contraction
+
+
+def _symbol_table(lines: List[str]) -> Dict[str, List[int]]:
+    """name -> result dims for every instruction in a computation."""
+    out: Dict[str, List[int]] = {}
+    for line in lines:
+        m = re.match(r"(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)", line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        sm = SHAPE_RE.search(rhs)
+        if sm:
+            out[name] = [int(d) for d in sm.group(2).split(",") if d] or [1]
+    return out
+
+
+def analyze_computations(comps: Dict[str, Computation]) -> None:
+    for c in comps.values():
+        symbols = _symbol_table(c.lines)
+        for line in c.lines:
+            rhs = line.split("= ", 1)[1]
+            if re.search(r"\bdot\(", rhs):
+                c.flops += _dot_flops(line, symbols)
+            for col in COLLECTIVES:
+                if re.search(rf"\b{col}(-start)?\(", rhs):
+                    # wire bytes ~ result bytes (all-gather result is the
+                    # gathered buffer; all-reduce/permute result = operand)
+                    c.coll[col] = c.coll.get(col, 0.0) + _shape_bytes(
+                        rhs.split("(")[0]
+                    )
+            if " while(" in rhs or rhs.startswith("while("):
+                body = re.search(r"body=%?([\w.\-]+)", rhs)
+                cond = re.search(r"condition=%?([\w.\-]+)", rhs)
+                if body:
+                    c.calls.append((body.group(1), "while", cond.group(1) if cond else None))
+            else:
+                for cm_ in CALL_RE.finditer(rhs):
+                    c.calls.append((cm_.group(1), "call", None))
+
+
+def trip_count(comps: Dict[str, Computation], cond_name: Optional[str]) -> int:
+    """Loop bound from the condition computation. XLA:CPU lowers the
+    compare through a fusion, so the robust signal is the (single) integer
+    constant the tiny condition computation holds."""
+    cond = comps.get(cond_name or "")
+    if cond is None:
+        return 1
+    ints = [
+        int(m.group(1))
+        for line in cond.lines
+        for m in re.finditer(r"constant\((\d+)\)", line)
+    ]
+    return max(ints) if ints else 1
+
+
+def scan_aware_totals(text: str) -> Dict[str, float]:
+    comps, entry_name = parse_hlo(text)
+    analyze_computations(comps)
+
+    entry = comps.get(entry_name) if entry_name else None
+    if entry is None:  # fall back: the computation with most lines
+        entry = max(comps.values(), key=lambda c: len(c.lines))
+
+    memo: Dict[str, Dict[str, float]] = {}
+    stack: set = set()
+
+    def walk(name: str, depth=0) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None or depth > 64 or name in stack:
+            return {"flops": 0.0}
+        stack.add(name)
+        total = {"flops": c.flops}
+        for col, b in c.coll.items():
+            total[col] = total.get(col, 0.0) + b
+        for callee, kind, cond in c.calls:
+            sub = walk(callee, depth + 1)
+            mult = trip_count(comps, cond) if kind == "while" else 1
+            for k, v in sub.items():
+                total[k] = total.get(k, 0.0) + v * mult
+        stack.discard(name)
+        memo[name] = total
+        return total
+
+    return walk(entry.name)
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    flops: float
+    hbm_bytes: float
+    coll_bytes: Dict[str, float]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / total compiled FLOPs (per-chip x chips). < 1 with
+        remat or redundant (replicated) compute; the gap is the waste the
+        §Perf pass hunts."""
+        return self.model_flops / max(self.n_chips * self.flops, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the roofline bound the dominant term achieves if
+        the other terms fully overlap: useful-compute time / bound."""
+        useful_s = self.model_flops / (self.n_chips * TPU_V5E.flops)
+        return useful_s / max(self.bound_s, 1e-30)
+
+
+def model_flops_for(arch: str, shape_name: str) -> float:
+    """MODEL_FLOPS = 6*N(active)*D for train; 2*N(active)*B (+ cache
+    reads-as-flops excluded) for decode; 2*N(active)*tokens for prefill."""
+    from repro.configs import get_config, get_shape
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    return 2.0 * n_active * tokens
+
+
+def analyze_cell(json_path: str) -> Optional[Roofline]:
+    with open(json_path) as f:
+        rec = json.load(f)
+    if "skipped" in rec:
+        return None
+    hlo_path = json_path.replace(".json", ".hlo.zst")
+    totals = {"flops": rec["cost"]["flops"]}
+    coll = {k: v for k, v in rec["collectives"].items() if k != "count"}
+    if os.path.exists(hlo_path):
+        import zstandard as zstd
+
+        with open(hlo_path, "rb") as f:
+            text = zstd.ZstdDecompressor().decompress(f.read()).decode()
+        totals = scan_aware_totals(text)
+        coll = {k: totals.get(k, 0.0) for k in COLLECTIVES}
+    chips = rec["n_chips"]
+    hw = TPU_V5E
+    mem = rec.get("memory", {})
+    # The compiled module is the per-device SPMD program: parsed FLOPs,
+    # collective bytes and memory_analysis buffers are all PER-CHIP
+    # quantities, so roofline terms divide by per-chip peaks only.
+    hbm_traffic = (
+        mem.get("argument_size_in_bytes", 0.0)
+        + mem.get("output_size_in_bytes", 0.0)
+        + 2 * mem.get("temp_size_in_bytes", 0.0)
+    )
+    coll_total = sum(coll.values())
+    flops = max(totals.get("flops", 0.0), rec["cost"]["flops"])
+    return Roofline(
+        arch=rec["arch"],
+        shape=rec["shape"],
+        mesh=rec["mesh"],
+        n_chips=chips,
+        flops=flops,
+        hbm_bytes=hbm_traffic,
+        coll_bytes=coll,
+        compute_s=flops / hw.flops,
+        memory_s=hbm_traffic / hw.hbm_bw,
+        collective_s=coll_total / (hw.ici_links * hw.ici_link_bw),
+        model_flops=model_flops_for(rec["arch"], rec["shape"]),
+    )
+
+
+def analyze_dir(dry_dir: str = "results/dryrun") -> List[Roofline]:
+    out = []
+    for name in sorted(os.listdir(dry_dir)):
+        if name.endswith(".json"):
+            r = analyze_cell(os.path.join(dry_dir, name))
+            if r is not None:
+                out.append(r)
+    return out
+
+
+def print_table(rows: List[Roofline]) -> None:
+    print("arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+          "model_flops_ratio,step_bound_s")
+    for r in rows:
+        print(
+            f"{r.arch},{r.shape},{r.mesh},{r.compute_s:.4e},{r.memory_s:.4e},"
+            f"{r.collective_s:.4e},{r.dominant},{r.useful_ratio:.3f},"
+            f"{r.bound_s:.4e}"
+        )
+
+
+if __name__ == "__main__":
+    import sys
+
+    rows = analyze_dir(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")
+    print_table(rows)

@@ -1,0 +1,45 @@
+"""Benchmark driver: one entry per paper table/figure + kernel benches.
+
+Prints ``name,us_per_call,derived`` CSV (see each module for semantics).
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig6,fig8
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from benchmarks import kernel_bench, paper_tables  # noqa: E402
+
+SECTIONS = {
+    "fig3": paper_tables.fig3_traces,
+    "fig5": paper_tables.fig5_costmodel,
+    "fig6": paper_tables.fig6_decode_speedup,
+    "fig7": paper_tables.fig7_e2e_throughput,
+    "fig8": paper_tables.fig8_ablation,
+    "fig9": paper_tables.fig9_sensitivity,
+    "table3": paper_tables.table3_utilization,
+    "robustness": paper_tables.robustness_and_overhead,
+    "kernels": kernel_bench.run_all,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(SECTIONS))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SECTIONS)
+    print("name,us_per_call,derived")
+    for name in names:
+        t0 = time.time()
+        SECTIONS[name]()
+        print(f"# section {name} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: build a model from a pool config, train a few steps,
+then prefill + decode — all on CPU at smoke scale.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.data.pipeline import SyntheticCorpus
+from repro.models import decode_step, init_params, prefill
+from repro.training.optimizer import AdamWConfig, adamw_init
+from repro.training.train_step import make_train_step
+
+
+def main():
+    cfg = reduce_for_smoke(get_config("llama3.2-3b"))
+    print(f"arch={cfg.name} layers={cfg.n_layers} d_model={cfg.d_model} "
+          f"params={cfg.param_count()/1e6:.1f}M")
+
+    rng = jax.random.PRNGKey(0)
+    params = init_params(rng, cfg)
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=5)
+    opt = adamw_init(params, opt_cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+
+    corpus = SyntheticCorpus(cfg.vocab_size)
+    for i in range(10):
+        batch = {k: jnp.asarray(v) for k, v in corpus.batch(i, 4, 32).items()}
+        params, opt, m = step(params, opt, batch)
+        print(f"step {i}: loss={float(m['loss']):.4f}")
+
+    # generate a few tokens
+    prompt = jnp.asarray(corpus.batch(99, 1, 8)["tokens"])
+    _, cache = prefill(params, cfg, {"tokens": prompt}, cache_len=16)
+    tok = prompt[:, -1:]
+    out = []
+    for i in range(8):
+        logits, cache, _ = decode_step(params, cfg, tok, cache, jnp.int32(8 + i))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    print("generated token ids:", out)
+
+
+if __name__ == "__main__":
+    main()

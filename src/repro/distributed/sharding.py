@@ -1,0 +1,295 @@
+"""Parameter / activation / cache sharding rules for the production mesh.
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+Batch shards over (pod, data) — pure DP across pods (DCN) and within a pod
+(ICI). Parameters shard over "model" (TP for dense projections, EP for the
+expert dim) and, for archs above the FSDP threshold, additionally over
+"data" (ZeRO-3 style) so DeepSeek-V2-236B training state fits 16 GB chips.
+
+Rules are name+shape driven with a generic fallback: named overrides pin
+the semantically right axis (heads -> model, experts -> model, vocab ->
+model); the fallback shards the largest divisible dim over "model" and
+the next over "data". Dims that do not divide the axis stay replicated —
+reported, not crashed, so every (arch x mesh) cell lowers.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+Params = Any
+
+# FSDP (shard params over "data" too) above this many parameters
+FSDP_THRESHOLD = 8e9
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+def _divisible(dim: int, n: int) -> bool:
+    return n > 1 and dim % n == 0
+
+
+def _named_rule(path: str, shape: tuple, mesh: Mesh, fsdp: bool):
+    """Return a list of axis names (or None) per dim, or None if no rule."""
+    ms = _axis_size(mesh, "model")
+    ds = _axis_size(mesh, "data")
+
+    def ax(dim, name):
+        n = ms if name == "model" else ds
+        return name if _divisible(dim, n) else None
+
+    last = path.split("/")[-1]
+    nd = len(shape)
+
+    if last == "table":  # embedding [V, D]
+        if _divisible(shape[0], ms):
+            return [ax(shape[0], "model"), ax(shape[1], "data") if fsdp else None]
+        # odd vocab (seamless 256206, granite-moe 49155): shard D instead
+        return [None, ax(shape[1], "model")]
+    if last == "w" and "head" in path:  # [D, V]
+        if _divisible(shape[1], ms):
+            return [ax(shape[0], "data") if fsdp else None, ax(shape[1], "model")]
+        return [ax(shape[0], "model"), None]
+    if last in ("wq", "wk", "wv"):  # [.., D, H|KV, hd]
+        h_ax = ax(shape[-2], "model")
+        d_ax = ax(shape[-3], "data") if fsdp else None
+        if h_ax is None:
+            # heads don't divide the model axis (llama 24H, MQA kv=1):
+            # column-parallel fallback — shard the contracting D dim
+            # (partial sums all-reduce; §Perf iterates on this)
+            if fsdp and _divisible(shape[-3], ms * ds):
+                d_ax = ("data", "model")
+            elif _divisible(shape[-3], ms):
+                d_ax = "model" if not fsdp else d_ax
+        return [None] * (nd - 3) + [d_ax, h_ax, None]
+    if last == "wo":  # [.., H, hd, D]
+        h_ax = ax(shape[-3], "model")
+        d_ax = ax(shape[-1], "data") if fsdp else None
+        if h_ax is None:
+            if fsdp and _divisible(shape[-1], ms * ds):
+                d_ax = ("data", "model")
+            elif _divisible(shape[-1], ms):
+                d_ax = "model" if not fsdp else d_ax
+        return [None] * (nd - 3) + [h_ax, None, d_ax]
+    if last in ("bq", "bk", "bv"):  # [H, hd]
+        return [None] * (nd - 2) + [ax(shape[-2], "model"), None]
+    if last == "wkv_a":  # [.., D, r+rope]
+        return [None] * (nd - 2) + [
+            ax(shape[-2], "data") if fsdp else None, ax(shape[-1], "model")]
+    if last == "wkv_b":  # [.., r, H, k]
+        return [None] * (nd - 3) + [
+            ax(shape[-3], "data") if fsdp else None, ax(shape[-2], "model"), None]
+    if last in ("w_gate", "w_up") and nd >= 3 and "shared" not in path:
+        # routed experts [.., E, D, F]: EP over model, FSDP over D
+        e_ax = ax(shape[-3], "model")
+        return [None] * (nd - 3) + [
+            e_ax, ax(shape[-2], "data") if fsdp else None,
+            ax(shape[-1], "model") if e_ax is None else None]
+    if last == "w_down" and nd >= 3 and "shared" not in path:
+        # [.., E, F, D]
+        e_ax = ax(shape[-3], "model")
+        return [None] * (nd - 3) + [
+            e_ax, ax(shape[-2], "model") if e_ax is None else None,
+            ax(shape[-1], "data") if fsdp else None]
+    if last in ("w_gate", "w_up") and nd >= 2:  # dense / shared MLP [.., D, F]
+        return [None] * (nd - 2) + [
+            ax(shape[-2], "data") if fsdp else None, ax(shape[-1], "model")]
+    if last == "w_down" and nd >= 2:  # [.., F, D]
+        return [None] * (nd - 2) + [
+            ax(shape[-2], "model"), ax(shape[-1], "data") if fsdp else None]
+    if last == "router":  # [.., D, E]: contracting-dim sharded (E is small)
+        return [None] * (nd - 2) + [ax(shape[-2], "model"), None]
+    if last == "in_proj":  # mamba [.., D, 2Di]
+        return [None] * (nd - 2) + [
+            ax(shape[-2], "data") if fsdp else None, ax(shape[-1], "model")]
+    if last == "out_proj":  # [.., Di, D]
+        return [None] * (nd - 2) + [
+            ax(shape[-2], "model"), ax(shape[-1], "data") if fsdp else None]
+    if last in ("conv_w",):  # [.., k, Di]
+        return [None] * (nd - 1) + [ax(shape[-1], "model")]
+    if last in ("conv_b", "dt_bias", "D"):  # [.., Di]
+        return [None] * (nd - 1) + [ax(shape[-1], "model")]
+    if last == "x_proj":  # [.., Di, e]
+        return [None] * (nd - 2) + [ax(shape[-2], "model"), None]
+    if last == "dt_proj":  # [.., dtr, Di]
+        return [None] * (nd - 2) + [None, ax(shape[-1], "model")]
+    if last == "A_log":  # [.., Di, N]
+        return [None] * (nd - 2) + [ax(shape[-2], "model"), None]
+    if last == "scale":  # norms
+        return [None] * nd
+    return None
+
+
+def _generic_rule(shape: tuple, mesh: Mesh, fsdp: bool, skip_leading: int):
+    ms, ds = _axis_size(mesh, "model"), _axis_size(mesh, "data")
+    spec: list = [None] * len(shape)
+    order = sorted(
+        range(skip_leading, len(shape)), key=lambda i: -shape[i]
+    )
+    for i in order:
+        if spec[i] is None and _divisible(shape[i], ms):
+            spec[i] = "model"
+            break
+    if fsdp:
+        for i in order:
+            if spec[i] is None and _divisible(shape[i], ds):
+                spec[i] = "data"
+                break
+    return spec
+
+
+def param_pspec(path: str, shape: tuple, mesh: Mesh, fsdp: bool) -> P:
+    if len(shape) == 0:
+        return P()
+    # scan-stacked params carry a leading group dim — never shard it
+    stacked = "stack" in path
+    rule = _named_rule(path, shape, mesh, fsdp)
+    if rule is None:
+        rule = _generic_rule(shape, mesh, fsdp, 1 if stacked else 0)
+        if not stacked and len(shape) == 1:
+            rule = [None]
+    return P(*rule)
+
+
+def _tree_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    for kp, leaf in flat:
+        path = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp
+        )
+        yield path, leaf
+    return
+
+
+def tree_pspecs(tree, mesh: Mesh, cfg: Optional[ModelConfig] = None, fsdp=None):
+    """PartitionSpec pytree for a params-like tree."""
+    if fsdp is None:
+        fsdp = cfg is not None and cfg.param_count() >= FSDP_THRESHOLD
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = []
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        specs.append(param_pspec(path, tuple(leaf.shape), mesh, fsdp))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ------------------------------------------------------------- activations
+def dp_axes(mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def batch_pspec(mesh: Mesh, ndim: int) -> P:
+    return P(dp_axes(mesh), *([None] * (ndim - 1)))
+
+
+def cache_pspec(path: str, shape: tuple, mesh: Mesh) -> P:
+    """Decode caches: batch over DP axes, sequence over 'model' (the
+    cache is the dominant decode working set; seq-sharding it is the
+    ring-attention-style layout the §Perf pass iterates on)."""
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,)):
+        if a:
+            dp_size *= _axis_size(mesh, a)
+    ms = _axis_size(mesh, "model")
+    last = path.split("/")[-1]
+    stacked = "stack" in path
+    off = 1 if stacked else 0
+    nd = len(shape)
+    spec: list = [None] * nd
+    bdim = off  # batch dim position
+    if nd > bdim and shape[bdim] % dp_size == 0:
+        spec[bdim] = dp
+    if last in ("k", "v", "ckv", "krope", "ck", "cv") and nd > bdim + 1:
+        if _divisible(shape[bdim + 1], ms):
+            spec[bdim + 1] = "model"
+    elif last in ("ssm", "conv", "C", "n", "m", "c", "h") and nd > bdim + 1:
+        # recurrent states: shard the inner (channel) dim over model
+        for i in range(bdim + 1, nd):
+            if _divisible(shape[i], ms):
+                spec[i] = "model"
+                break
+    return P(*spec)
+
+
+def cache_pspecs(cache_tree, mesh: Mesh):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    specs = []
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        specs.append(cache_pspec(path, tuple(leaf.shape), mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ------------------------------------------------------------ tiered MoE
+def tiered_pspec(path: str, shape: tuple, mesh: Mesh) -> P:
+    """hot: replicated; warm: striped (F over model); cold: localized
+    (expert dim over data x model)."""
+    stacked = "stack" in path
+    off = 1 if stacked else 0
+    nd = len(shape)
+    spec: list = [None] * nd
+    if "/hot" in path or path.endswith("hot"):
+        pass  # replicated
+    elif "/warm" in path or path.endswith("warm"):
+        # [.., n, 3, D, F] -> F over model
+        if nd >= off + 4 and _divisible(shape[-1], _axis_size(mesh, "model")):
+            spec[-1] = "model"
+    elif "/cold" in path or path.endswith("cold"):
+        # localized: each cold expert homed on ONE data-row (its "DIMM
+        # group"), F striped within the row. Expert pools are padded to
+        # the data axis by init_tiered_state, so this always divides; the
+        # full-mesh (data x model) layout is tried first for big pools.
+        n = shape[off]
+        full = tuple(a for a in ("data", "model") if a in mesh.shape)
+        full_size = int(np.prod([mesh.shape[a] for a in full]))
+        if _divisible(n, full_size):
+            spec[off] = full
+        elif _divisible(n, _axis_size(mesh, "data")):
+            spec[off] = "data"
+            if nd >= off + 4 and _divisible(shape[-1], _axis_size(mesh, "model")):
+                spec[-1] = "model"
+        elif nd >= off + 4 and _divisible(shape[-1], _axis_size(mesh, "model")):
+            spec[-1] = "model"
+    return P(*spec)
+
+
+def tiered_pspecs(tiered_tree, mesh: Mesh):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tiered_tree)
+    specs = []
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        specs.append(tiered_pspec(path, tuple(leaf.shape), mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_state_pspecs(opt_state, params_pspecs):
+    """Optimizer moments inherit parameter sharding (ZeRO)."""
+    out = {}
+    for key in ("m", "v", "ef"):
+        if key in opt_state:
+            out[key] = params_pspecs
+    out["step"] = P()
+    return {k: (params_pspecs if k in ("m", "v", "ef") else P()) for k in opt_state}
+
+
+def report_replicated(params, mesh: Mesh, cfg=None, min_bytes: int = 1 << 24):
+    """List large fully-replicated leaves (sharding-rule escapes)."""
+    out = []
+    specs = tree_pspecs(params, mesh, cfg)
+    flat_p, _ = jax.tree_util.tree_flatten_with_path(params)
+    flat_s = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)
+    )
+    for (kp, leaf), spec in zip(flat_p, flat_s):
+        if all(s is None for s in spec) and np.prod(leaf.shape) * 2 >= min_bytes:
+            out.append(("/".join(map(str, kp)), leaf.shape))
+    return out

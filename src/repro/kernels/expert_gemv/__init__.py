@@ -1,0 +1,5 @@
+from repro.kernels.expert_gemv.expert_gemv import expert_ffn_gemv
+from repro.kernels.expert_gemv.ops import cold_expert_ffn
+from repro.kernels.expert_gemv.ref import expert_ffn_ref
+
+__all__ = ["expert_ffn_gemv", "cold_expert_ffn", "expert_ffn_ref"]

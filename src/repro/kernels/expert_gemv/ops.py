@@ -1,0 +1,29 @@
+"""jit'd wrapper: batched cold-expert execution (one NDP per expert)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.expert_gemv.expert_gemv import expert_ffn_gemv
+from repro.kernels.expert_gemv.ref import expert_ffn_ref
+
+
+@functools.partial(jax.jit, static_argnames=("bf", "interpret", "use_ref"))
+def cold_expert_ffn(
+    x: jnp.ndarray,  # [E, C, D] per-expert token buffers (C small)
+    w1: jnp.ndarray,  # [E, D, F]
+    w3: jnp.ndarray,  # [E, D, F]
+    w2: jnp.ndarray,  # [E, F, D]
+    *,
+    bf: int = 512,
+    interpret: bool = True,
+    use_ref: bool = False,
+) -> jnp.ndarray:
+    """Each expert's buffer runs the fused single-pass FFN — the
+    per-DIMM-NDP parallelism of the paper (one localized expert per unit)."""
+    if use_ref:
+        return jax.vmap(expert_ffn_ref)(x, w1, w3, w2)
+    fn = functools.partial(expert_ffn_gemv, bf=bf, interpret=interpret)
+    return jax.vmap(fn)(x, w1, w3, w2)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused expert FFN GEMV."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def expert_ffn_ref(x, w1, w3, w2):
+    """x: [T, D]; w1/w3: [D, F]; w2: [F, D] -> [T, D].
+
+    y = (silu(x @ w1) * (x @ w3)) @ w2  — one expert's SwiGLU FFN.
+    """
+    g = jnp.einsum("td,df->tf", x, w1)
+    u = jnp.einsum("td,df->tf", x, w3)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("tf,fd->td", h, w2)

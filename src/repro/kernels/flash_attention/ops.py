@@ -1,0 +1,41 @@
+"""jit'd wrapper reshaping [B, S, H, hd] model layout to kernel layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "bq", "bk", "interpret", "use_ref")
+)
+def mha(
+    q: jnp.ndarray,  # [B, Sq, H, hd]
+    k: jnp.ndarray,  # [B, Sk, H, hd]  (GQA expanded by caller)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    bq: int = 256,
+    bk: int = 256,
+    interpret: bool = True,
+    use_ref: bool = False,
+) -> jnp.ndarray:
+    b, sq, h, dh = q.shape
+    qt = q.transpose(0, 2, 1, 3).reshape(b * h, sq, dh)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * h, -1, dh)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * h, -1, dh)
+    if use_ref:
+        o = attention_ref(
+            qt.reshape(b, h, sq, dh),
+            kt.reshape(b, h, -1, dh),
+            vt.reshape(b, h, -1, dh),
+            causal=causal,
+        ).reshape(b * h, sq, dh)
+    else:
+        o = flash_attention(qt, kt, vt, causal=causal, bq=bq, bk=bk,
+                            interpret=interpret)
+    return o.reshape(b, h, sq, dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for flash attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q: [B, H, Sq, dh]; k/v: [B, H, Sk, dh] -> [B, H, Sq, dh]."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        sq, sk = q.shape[2], k.shape[2]
+        mask = jnp.arange(sk)[None, :] <= (jnp.arange(sq)[:, None] + (sk - sq))
+        s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)

@@ -1,0 +1,5 @@
+from repro.kernels.moe_gemm.moe_gemm import moe_gemm
+from repro.kernels.moe_gemm.ops import grouped_expert_matmul
+from repro.kernels.moe_gemm.ref import moe_gemm_ref
+
+__all__ = ["moe_gemm", "grouped_expert_matmul", "moe_gemm_ref"]

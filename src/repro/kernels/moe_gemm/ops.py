@@ -1,0 +1,72 @@
+"""jit'd public wrapper for the grouped expert GEMM kernel.
+
+Handles the host-side prep the kernel contract requires: sorting tokens
+by expert, padding every expert group to the M-tile, building the
+tile->expert map, and unpadding the result. On CPU (tests/smoke) the
+kernel runs in interpret mode; `use_ref=True` routes to the jnp oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_gemm.moe_gemm import moe_gemm
+from repro.kernels.moe_gemm.ref import moe_gemm_ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "interpret", "use_ref", "capacity")
+)
+def grouped_expert_matmul(
+    x: jnp.ndarray,  # [T, D] tokens in arbitrary order
+    expert_of: jnp.ndarray,  # [T] int32 expert id per token
+    w: jnp.ndarray,  # [E, D, F]
+    *,
+    capacity: int,  # static upper bound for padded length
+    bm: int = 128,
+    bn: int = 128,
+    interpret: bool = True,
+    use_ref: bool = False,
+) -> jnp.ndarray:
+    """Returns [T, F] with row i = x[i] @ w[expert_of[i]]."""
+    t, d = x.shape
+    e, _, f = w.shape
+
+    order = jnp.argsort(expert_of, stable=True)
+    xs = x[order]
+    se = expert_of[order]
+    group_sizes = jnp.zeros((e,), jnp.int32).at[se].add(1)
+
+    if use_ref:
+        ys = moe_gemm_ref(xs, w, group_sizes)
+    else:
+        # pad each group to a multiple of bm: compute destination rows
+        padded_sizes = (group_sizes + bm - 1) // bm * bm
+        starts = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(padded_sizes)[:-1]]
+        )
+        rank = jnp.arange(t, dtype=jnp.int32) - jnp.searchsorted(
+            se, se, side="left"
+        ).astype(jnp.int32)
+        dest = starts[se] + rank
+        t_pad = _round_up(capacity, bm)
+        xp = jnp.zeros((t_pad, d), x.dtype).at[dest].set(xs, mode="drop")
+        # tile -> expert map
+        n_tiles = t_pad // bm
+        tile_start = jnp.arange(n_tiles, dtype=jnp.int32) * bm
+        ends = jnp.cumsum(padded_sizes)
+        tile_expert = jnp.clip(
+            jnp.searchsorted(ends, tile_start, side="right"), 0, e - 1
+        ).astype(jnp.int32)
+        yp = moe_gemm(xp, w, tile_expert, bm=bm, bn=bn, interpret=interpret)
+        ys = yp[dest]
+
+    # unsort back to input order
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(t))
+    return ys[inv]

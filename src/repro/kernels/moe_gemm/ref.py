@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the grouped expert GEMM."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def moe_gemm_ref(x: jnp.ndarray, w: jnp.ndarray, group_sizes: jnp.ndarray) -> jnp.ndarray:
+    """x: [T, D] tokens sorted by expert; w: [E, D, F]; group_sizes: [E].
+
+    Returns [T, F] where row i is x[i] @ w[expert_of(i)].
+    """
+    t = x.shape[0]
+    e = w.shape[0]
+    ends = jnp.cumsum(group_sizes)
+    # expert id per row: number of group-ends <= row index
+    expert_of = jnp.searchsorted(ends, jnp.arange(t), side="right")
+    expert_of = jnp.clip(expert_of, 0, e - 1)
+    w_per_tok = jnp.take(w, expert_of, axis=0)  # [T, D, F]
+    return jnp.einsum("td,tdf->tf", x, w_per_tok)

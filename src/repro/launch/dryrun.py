@@ -1,0 +1,338 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds abstract (ShapeDtypeStruct) inputs, applies the
+production sharding rules, AOT-compiles the step function on the 16x16
+single-pod mesh and the 2x16x16 multi-pod mesh, prints
+memory_analysis()/cost_analysis(), extracts per-collective byte counts
+from the optimized HLO, and dumps JSON to results/dryrun/ for the
+roofline analysis (benchmarks/roofline.py).
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek-v2-236b --shape decode_32k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both]
+"""
+import argparse
+import json
+import re
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ALL_SHAPES, ASSIGNED, get_config, get_shape, shape_applicable
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import (
+    batch_pspec,
+    cache_pspecs,
+    dp_axes,
+    opt_state_pspecs,
+    tiered_pspecs,
+    tree_pspecs,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import decode_step, forward_train, init_cache, init_params, prefill
+from repro.serving.engine import init_tiered_for_model, strip_expert_weights
+from repro.serving.tiered_moe import tier_sizes
+from repro.training.optimizer import AdamWConfig, adamw_init
+from repro.training.train_step import make_train_step
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+# ------------------------------------------------------------ input specs
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+    elif shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    else:  # decode: one new token against a seq_len cache
+        specs = {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    if cfg.encdec is not None:
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encdec.frontend_frames, cfg.d_model), jnp.dtype(cfg.param_dtype)
+        )
+    return specs
+
+
+def _batch_specs_sharded(specs, mesh, batch, seq_parallel: bool = False):
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in (dp if isinstance(dp, tuple) else (dp,)) if a]))
+    out = {}
+    for k, v in specs.items():
+        bspec = dp if batch % dp_size == 0 else None
+        # sequence parallelism: shard S over the model axis so attention
+        # scores partition by query rows instead of replicating across
+        # chips whose head count doesn't divide the axis (§Perf)
+        sspec = "model" if (
+            seq_parallel and v.ndim >= 2 and v.shape[1] % mesh.shape["model"] == 0
+        ) else None
+        out[k] = NamedSharding(mesh, P(bspec, sspec, *([None] * (v.ndim - 2))))
+    return out
+
+
+def _ns(mesh, pspec_tree):
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, p), pspec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# -------------------------------------------------------------- HLO stats
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes of every cross-device collective in the
+    optimized HLO. Shapes look like `bf16[2,128,5120]{...}`."""
+    dt_bytes = {
+        "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+        "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    }
+    out = {c: 0.0 for c in COLLECTIVES}
+    out["count"] = 0
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.*)", ls)
+        if m is None:
+            continue
+        rhs = m.group(1)
+        op = None
+        for c in COLLECTIVES:
+            if re.search(rf"\b{c}(-start|-done)?\(", rhs) or rhs.startswith(f"{c}("):
+                op = c
+                break
+            # tuple-shaped async forms: "(bf16[..], bf16[..]) all-gather-start("
+            if f" {c}-start(" in rhs or f" {c}(" in rhs:
+                op = c
+                break
+        if op is None or f"{op}-done" in rhs:
+            continue
+        total = 0
+        for dt, dims in shape_re.findall(rhs.split("(")[0]):
+            if dt not in dt_bytes:
+                continue
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            total += n * dt_bytes[dt]
+        out[op] += float(total)
+        out["count"] += 1
+    return out
+
+
+def hlo_flop_bytes(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    ca = dict(ca or {})
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+
+
+def memory_stats(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        ma = None
+    out = {}
+    for key in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "generated_code_size_in_bytes",
+    ):
+        if ma is not None and hasattr(ma, key):
+            out[key] = float(getattr(ma, key))
+    return out
+
+
+# ------------------------------------------------------------- cell build
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, seq_parallel: bool = False):
+    """Returns (jitted_fn, abstract_args) for one cell."""
+    rng = jax.random.PRNGKey(0)
+    params_spec = jax.eval_shape(lambda: init_params(rng, cfg))
+    p_shard = _ns(mesh, tree_pspecs(params_spec, mesh, cfg))
+
+    if shape.kind == "train":
+        opt_spec = jax.eval_shape(lambda: adamw_init(params_spec))
+        o_shard = {
+            "m": p_shard, "v": p_shard,
+            "step": NamedSharding(mesh, P()),
+        }
+        batch = input_specs(cfg, shape)
+        b_shard = _batch_specs_sharded(batch, mesh, shape.global_batch, seq_parallel)
+        step = make_train_step(cfg)
+        fn = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            donate_argnums=(0, 1),
+        )
+        return fn, (params_spec, opt_spec, batch)
+
+    if shape.kind == "prefill":
+        batch = input_specs(cfg, shape)
+        b_shard = _batch_specs_sharded(batch, mesh, shape.global_batch, seq_parallel)
+
+        def fn_prefill(params, batch):
+            logits, cache = prefill(params, cfg, batch)
+            return logits, cache
+
+        fn = jax.jit(fn_prefill, in_shardings=(p_shard, b_shard))
+        return fn, (params_spec, batch)
+
+    # decode
+    cache_spec = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+    c_shard = _ns(mesh, cache_pspecs(cache_spec, mesh))
+    batch = input_specs(cfg, shape)
+    b_shard = _batch_specs_sharded(batch, mesh, shape.global_batch)
+    pos_shard = NamedSharding(mesh, P())
+
+    if cfg.moe is not None:
+        sizes = tier_sizes(cfg)
+        tiered_spec = jax.eval_shape(
+            lambda: init_tiered_for_model(jax.random.PRNGKey(1), cfg, sizes)
+        )
+        t_shard = _ns(mesh, tiered_pspecs(tiered_spec, mesh))
+        sparams_spec = strip_expert_weights(params_spec, cfg)
+        sp_shard = _ns(mesh, tree_pspecs(sparams_spec, mesh, cfg))
+
+        def fn_decode(params, tokens, cache, pos, tiered):
+            return decode_step(params, cfg, tokens, cache, pos, tiered=tiered)
+
+        fn = jax.jit(
+            fn_decode,
+            in_shardings=(sp_shard, b_shard["tokens"], c_shard, pos_shard, t_shard),
+            donate_argnums=(2,),
+        )
+        return fn, (
+            sparams_spec, batch["tokens"], cache_spec,
+            jax.ShapeDtypeStruct((), jnp.int32), tiered_spec,
+        )
+
+    def fn_decode_dense(params, tokens, cache, pos):
+        return decode_step(params, cfg, tokens, cache, pos)
+
+    fn = jax.jit(
+        fn_decode_dense,
+        in_shardings=(p_shard, b_shard["tokens"], c_shard, pos_shard),
+        donate_argnums=(2,),
+    )
+    return fn, (
+        params_spec, batch["tokens"], cache_spec, jax.ShapeDtypeStruct((), jnp.int32)
+    )
+
+
+def run_cell(
+    arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+    seq_parallel: bool = False, tag: str = "",
+) -> Dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, why = shape_applicable(cfg, shape)
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+    }
+    if not ok:
+        result["skipped"] = why
+        return result
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    from repro.models.attention import set_sequence_parallel
+    from repro.models.moe import set_moe_sharding_hints
+
+    dp_tuple = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    set_sequence_parallel(mesh if seq_parallel else None, dp=dp_tuple)
+    set_moe_sharding_hints(dp=dp_tuple, ep="model", enable=True)
+    t0 = time.time()
+    fn, args = build_cell(cfg, shape, mesh, seq_parallel=seq_parallel)
+    with mesh:
+        lowered = fn.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+    hlo = compiled.as_text()
+    result.update(
+        n_chips=n_chips,
+        lower_s=round(t1 - t0, 2),
+        compile_s=round(t2 - t1, 2),
+        cost=hlo_flop_bytes(compiled),
+        memory=memory_stats(compiled),
+        collectives=collective_bytes(hlo),
+        hlo_lines=hlo.count("\n"),
+    )
+    # persist compressed HLO for the scan-aware roofline parser
+    # (XLA cost_analysis counts while-loop bodies ONCE; benchmarks/roofline.py
+    # re-derives FLOPs/collective bytes with trip-count multipliers)
+    import zstandard as zstd
+
+    os.makedirs(out_dir, exist_ok=True)
+    hname = f"{arch}__{shape_name}__{mesh_kind}{tag}.hlo.zst".replace("/", "_")
+    with open(os.path.join(out_dir, hname), "wb") as f:
+        f.write(zstd.ZstdCompressor(level=6).compress(hlo.encode()))
+    print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: "
+          f"compile={result['compile_s']}s flops={result['cost']['flops']:.3e} "
+          f"bytes={result['cost']['bytes']:.3e} "
+          f"coll_bytes={sum(v for k, v in result['collectives'].items() if k != 'count'):.3e}")
+    print("  memory_analysis:", result["memory"])
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{arch}__{shape_name}__{mesh_kind}{tag}.json".replace("/", "_")
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--seq-parallel", action="store_true",
+                    help="shard the sequence dim over the model axis (§Perf)")
+    ap.add_argument("--tag", default="", help="artifact filename suffix")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = ASSIGNED if (args.all or args.arch is None) else [args.arch]
+    shapes = (
+        [s.name for s in ALL_SHAPES]
+        if (args.all or args.shape is None)
+        else [args.shape]
+    )
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                try:
+                    run_cell(arch, shape, mk, args.out,
+                             seq_parallel=args.seq_parallel, tag=args.tag)
+                except Exception as e:  # a dry-run failure is a bug
+                    failures.append((arch, shape, mk, repr(e)))
+                    print(f"[dryrun] FAIL {arch} x {shape} x {mk}: {e!r}")
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Single pod: 16x16 = 256 chips, axes (data, model).
+Multi-pod:  2x16x16 = 512 chips, axes (pod, data, model) — the pod axis
+crosses DCN and carries only data parallelism (+ compressed gradient
+reduce, distributed/collectives.py).
+
+A FUNCTION, not a module constant: importing this module must never touch
+jax device state (smoke tests see 1 CPU device; only dryrun.py forces 512
+host devices).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int | None = None):
+    """Tiny mesh over whatever devices exist (tests / examples)."""
+    n = n_devices or len(jax.devices())
+    model = 1
+    for m in (4, 2, 1):
+        if n % m == 0:
+            model = m
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,19 @@
+from repro.models.model import (
+    decode_step,
+    forward_train,
+    init_cache,
+    init_params,
+    layer_signature,
+    prefill,
+    stack_plan,
+)
+
+__all__ = [
+    "decode_step",
+    "forward_train",
+    "init_cache",
+    "init_params",
+    "layer_signature",
+    "prefill",
+    "stack_plan",
+]

@@ -1,0 +1,130 @@
+"""Mamba (selective SSM) block: chunked parallel scan + O(1) decode step.
+
+Training runs a `lax.scan` over time chunks carrying the SSM state; within
+a chunk the recurrence h_t = Abar_t h_{t-1} + Bx_t is evaluated with
+`lax.associative_scan`, so peak memory is one chunk's [B, c, Di, N]
+trajectory instead of the full sequence's.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init
+
+
+def _dims(cfg):
+    mc = cfg.mamba
+    d_inner = int(mc.expand * cfg.d_model)
+    dt_rank = mc.dt_rank or -(-cfg.d_model // 16)
+    return mc, d_inner, dt_rank
+
+
+def init_mamba(rng, cfg) -> Params:
+    mc, di, dtr = _dims(cfg)
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dt),
+        "conv_w": dense_init(ks[1], (mc.d_conv, di), dt, scale=0.5),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * mc.d_state), dt),
+        "dt_proj": dense_init(ks[3], (dtr, di), dt),
+        "dt_bias": jnp.full((di,), -4.6, dt),  # softplus^-1(0.01)
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, mc.d_state + 1, dtype=jnp.float32), (di, mc.d_state))
+        ),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d), dt),
+    }
+
+
+def _ssm_inputs(p: Params, cfg, xz, conv_state=None):
+    """Shared pre-scan computation. xz: [B, S, D]."""
+    mc, di, dtr = _dims(cfg)
+    xi = jnp.einsum("bsd,de->bse", xz, p["in_proj"])
+    x, z = jnp.split(xi, 2, axis=-1)  # [B,S,Di] each
+    # causal depthwise conv over time
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], mc.d_conv - 1, di), x.dtype)
+    else:
+        pad = conv_state
+    xc = jnp.concatenate([pad, x], axis=1)
+    new_conv_state = xc[:, -(mc.d_conv - 1):, :] if mc.d_conv > 1 else pad
+    x = sum(
+        xc[:, i : i + x.shape[1], :] * p["conv_w"][i] for i in range(mc.d_conv)
+    ) + p["conv_b"]
+    x = jax.nn.silu(x.astype(jnp.float32)).astype(xz.dtype)
+
+    proj = jnp.einsum("bsi,ie->bse", x, p["x_proj"])
+    dt_in, b_ssm, c_ssm = jnp.split(proj, [dtr, dtr + mc.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_in, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )  # [B,S,Di] fp32
+    a = -jnp.exp(p["A_log"])  # [Di,N] fp32
+    abar = jnp.exp(dt[..., None] * a)  # [B,S,Di,N]
+    bx = (dt * x.astype(jnp.float32))[..., None] * b_ssm.astype(jnp.float32)[
+        :, :, None, :
+    ]  # [B,S,Di,N]
+    return x, z, abar, bx, c_ssm, new_conv_state
+
+
+def mamba_forward(
+    p: Params, cfg, xz: jnp.ndarray, chunk: int = 128, return_state: bool = False
+):
+    """Full-sequence forward. xz: [B, S, D] -> [B, S, D]."""
+    mc, di, _ = _dims(cfg)
+    b, s, d = xz.shape
+    x, z, abar, bx, c_ssm, new_conv = _ssm_inputs(p, cfg, xz)
+
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+
+    def step(h0, inp):
+        ab, bxc = inp  # [B,c,Di,N]
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+
+        a_cum, b_cum = jax.lax.associative_scan(combine, (ab, bxc), axis=1)
+        h = b_cum + a_cum * h0[:, None]  # [B,c,Di,N]
+        return h[:, -1], h
+
+    shape5 = (b, n, chunk, di, mc.d_state)
+    abar_c = abar.reshape(shape5).transpose(1, 0, 2, 3, 4)
+    bx_c = bx.reshape(shape5).transpose(1, 0, 2, 3, 4)
+    h0 = jnp.zeros((b, di, mc.d_state), jnp.float32)
+    h_last, hs = jax.lax.scan(step, h0, (abar_c, bx_c))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(b, s, di, mc.d_state)
+
+    y = jnp.einsum("bsin,bsn->bsi", h, c_ssm.astype(jnp.float32))
+    y = y + p["D"] * x.astype(jnp.float32)
+    y = y.astype(xz.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(xz.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    if return_state:
+        return out, {"ssm": h_last, "conv": new_conv}
+    return out
+
+
+def mamba_init_state(cfg, batch: int, dtype):
+    mc, di, _ = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, di, mc.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, mc.d_conv - 1, di), dtype),
+    }
+
+
+def mamba_decode(p: Params, cfg, xz: jnp.ndarray, state):
+    """Single-token step. xz: [B, 1, D]; state: {ssm, conv}."""
+    x, z, abar, bx, c_ssm, new_conv = _ssm_inputs(p, cfg, xz, state["conv"])
+    h = abar[:, 0] * state["ssm"] + bx[:, 0]  # [B,Di,N]
+    y = jnp.einsum("bin,bn->bi", h, c_ssm[:, 0].astype(jnp.float32))
+    y = y + p["D"] * x[:, 0].astype(jnp.float32)
+    y = y.astype(xz.dtype) * jax.nn.silu(z[:, 0].astype(jnp.float32)).astype(xz.dtype)
+    out = jnp.einsum("bi,id->bd", y, p["out_proj"])[:, None, :]
+    return out, {"ssm": h, "conv": new_conv}

@@ -1,0 +1,165 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory with
+exponential gating), per arXiv:2405.04517. Training uses `lax.scan` over
+time (the recurrences are inherently sequential; the carried state is
+O(1) in sequence length, which is why xlstm-125m runs the long_500k cell).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init, init_mlp, mlp
+
+
+# ------------------------------------------------------------------ mLSTM
+def _m_dims(cfg):
+    di = int(cfg.xlstm.proj_factor_m * cfg.d_model)
+    h = cfg.n_heads
+    dh = di // h
+    return di, h, dh
+
+
+def init_mlstm(rng, cfg) -> Params:
+    di, h, dh = _m_dims(cfg)
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 8)
+    return {
+        "up": dense_init(ks[0], (d, 2 * di), dt),
+        "wq": dense_init(ks[1], (di, di), dt),
+        "wk": dense_init(ks[2], (di, di), dt),
+        "wv": dense_init(ks[3], (di, di), dt),
+        "wi": dense_init(ks[4], (di, h), dt),
+        "wf": dense_init(ks[5], (di, h), dt),
+        "wo_gate": dense_init(ks[6], (di, di), dt),
+        "down": dense_init(ks[7], (di, d), dt),
+    }
+
+
+def mlstm_init_state(cfg, batch: int):
+    di, h, dh = _m_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -jnp.inf, jnp.float32),
+    }
+
+
+def _mlstm_cell(state, qkvif):
+    """One time step. q,k,v: [B,H,dh]; i,f: [B,H] (pre-activation logs)."""
+    q, k, v, ig, fg = qkvif
+    c, n, m = state["C"], state["n"], state["m"]
+    dh = q.shape[-1]
+    m_new = jnp.maximum(fg + m, ig)  # log-space stabilizer
+    i_s = jnp.exp(ig - m_new)[..., None]
+    f_s = jnp.exp(fg + m - m_new)[..., None]
+    kn = k * (dh ** -0.5)
+    c = f_s[..., None] * c + i_s[..., None] * (kn[..., :, None] * v[..., None, :])
+    n = f_s * n + i_s * kn
+    num = jnp.einsum("bhij,bhi->bhj", c, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhi,bhi->bh", n, q)), 1.0)
+    h_t = num / den[..., None]
+    return {"C": c, "n": n, "m": m_new}, h_t
+
+
+def _mlstm_inputs(p: Params, cfg, x):
+    di, h, dh = _m_dims(cfg)
+    up = jnp.einsum("bsd,de->bse", x, p["up"])
+    xm, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bse,ef->bsf", xm, p["wq"]).reshape(*xm.shape[:2], h, dh)
+    k = jnp.einsum("bse,ef->bsf", xm, p["wk"]).reshape(*xm.shape[:2], h, dh)
+    v = jnp.einsum("bse,ef->bsf", xm, p["wv"]).reshape(*xm.shape[:2], h, dh)
+    ig = jnp.einsum("bse,eh->bsh", xm, p["wi"]).astype(jnp.float32)
+    fg = jnp.einsum("bse,eh->bsh", xm, p["wf"]).astype(jnp.float32)
+    og = jax.nn.sigmoid(jnp.einsum("bse,ef->bsf", xm, p["wo_gate"]).astype(jnp.float32))
+    return q, k, v, ig, fg, og, z
+
+
+def mlstm_forward(p: Params, cfg, x: jnp.ndarray, return_state: bool = False):
+    di, h, dh = _m_dims(cfg)
+    b, s, _ = x.shape
+    q, k, v, ig, fg, og, z = _mlstm_inputs(p, cfg, x)
+
+    def step(st, inp):
+        st, h_t = _mlstm_cell(st, inp)
+        return st, h_t
+
+    xs = tuple(
+        a.transpose(1, 0, 2, 3).astype(jnp.float32) for a in (q, k, v)
+    ) + tuple(a.transpose(1, 0, 2) for a in (ig, fg))
+    st, hs = jax.lax.scan(step, mlstm_init_state(cfg, b), xs)
+    hseq = hs.transpose(1, 0, 2, 3).reshape(b, s, di)
+    y = (hseq * og).astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["down"])
+    return (out, st) if return_state else out
+
+
+def mlstm_decode(p: Params, cfg, x, state):
+    di, h, dh = _m_dims(cfg)
+    b = x.shape[0]
+    q, k, v, ig, fg, og, z = _mlstm_inputs(p, cfg, x)
+    st, h_t = _mlstm_cell(
+        state,
+        (q[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+         v[:, 0].astype(jnp.float32), ig[:, 0], fg[:, 0]),
+    )
+    y = (h_t.reshape(b, di) * og[:, 0]).astype(x.dtype)
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("be,ed->bd", y, p["down"])[:, None], st
+
+
+# ------------------------------------------------------------------ sLSTM
+def init_slstm(rng, cfg) -> Params:
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 3)
+    f = cfg.xlstm.proj_factor_s
+    d_ff = max(128, int(2 * f * d + 127) // 128 * 128)  # 128-align for MXU/sharding
+    return {
+        "w_in": dense_init(ks[0], (d, 4 * d), dt),  # i,f,z,o input weights
+        "r": dense_init(ks[1], (d, 4 * d), dt, scale=d ** -0.5),  # recurrent
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "ffn": init_mlp(ks[2], d, d_ff, dt),
+    }
+
+
+def slstm_init_state(cfg, batch: int):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, d), -jnp.inf, jnp.float32)}
+
+
+def _slstm_cell(p: Params, st, x_t):
+    """x_t: [B, D] pre-activations computed outside + recurrent term."""
+    d = x_t.shape[-1] // 4
+    rec = jnp.einsum("bd,de->be", st["h"].astype(x_t.dtype), p["r"].astype(x_t.dtype))
+    g = (x_t + rec).astype(jnp.float32) + p["b"]
+    ig, fg, zg, og = jnp.split(g, 4, axis=-1)
+    m_new = jnp.maximum(fg + st["m"], ig)
+    i_s = jnp.exp(ig - m_new)
+    f_s = jnp.exp(fg + st["m"] - m_new)
+    c = f_s * st["c"] + i_s * jnp.tanh(zg)
+    n = f_s * st["n"] + i_s
+    h = jax.nn.sigmoid(og) * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_forward(p: Params, cfg, x: jnp.ndarray, return_state: bool = False):
+    b, s, d = x.shape
+    xin = jnp.einsum("bsd,de->bse", x, p["w_in"])
+
+    def step(st, x_t):
+        st = _slstm_cell(p, st, x_t)
+        return st, st["h"]
+
+    st, hs = jax.lax.scan(step, slstm_init_state(cfg, b), xin.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    out = h + mlp(p["ffn"], h)
+    return (out, st) if return_state else out
+
+
+def slstm_decode(p: Params, cfg, x, state):
+    xin = jnp.einsum("bsd,de->bse", x, p["w_in"])[:, 0]
+    st = _slstm_cell(p, state, xin)
+    h = st["h"].astype(x.dtype)[:, None]
+    return h + mlp(p["ffn"], h), st

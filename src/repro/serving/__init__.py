@@ -1,0 +1,22 @@
+from repro.serving.batching import Request, ZigzagBatcher
+from repro.serving.engine import (
+    TriMoEServingEngine,
+    fill_tiers_from_params,
+    init_tiered_for_model,
+    strip_expert_weights,
+)
+from repro.serving.kv_cache import cache_bytes, cache_spec, reset_slots
+from repro.serving.tiered_moe import (
+    TierSizes,
+    apply_migrations,
+    init_tiered_state,
+    tier_sizes,
+    tiered_moe_forward,
+)
+
+__all__ = [
+    "Request", "ZigzagBatcher", "TriMoEServingEngine",
+    "fill_tiers_from_params", "init_tiered_for_model", "strip_expert_weights",
+    "cache_bytes", "cache_spec", "reset_slots", "TierSizes",
+    "apply_migrations", "init_tiered_state", "tier_sizes", "tiered_moe_forward",
+]

@@ -1,0 +1,100 @@
+"""Request batching for high-throughput offloading serving (paper §2.2).
+
+Offloading systems amortize weight movement over LARGE effective batches:
+offline batching concatenates queued requests; zigzag batching (paper's
+[9]) interleaves several micro-batches so that while one waits on
+off-GPU experts another decodes. Here we implement the batch-composition
+logic (the part above the step function): a request queue, slot
+allocation into a fixed decode batch, and zigzag group rotation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # int32 [prompt_len]
+    max_new_tokens: int
+    generated: List[int] = field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+@dataclass
+class BatchSlot:
+    request: Optional[Request] = None
+    pos: int = 0  # absolute decode position
+
+
+class ZigzagBatcher:
+    """Fixed-width decode batch with zigzag group rotation.
+
+    `n_groups` micro-batches share the device; group g is active on steps
+    where step % n_groups == g, letting expert fetch for one group overlap
+    another group's compute (the paper's high-throughput setting).
+    """
+
+    def __init__(self, batch_size: int, n_groups: int = 2):
+        assert batch_size % n_groups == 0
+        self.batch_size = batch_size
+        self.n_groups = n_groups
+        self.slots = [BatchSlot() for _ in range(batch_size)]
+        self.queue: List[Request] = []
+        self.step_idx = 0
+        self.completed: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _fill_slots(self) -> None:
+        for s in self.slots:
+            if s.request is None or s.request.done:
+                if s.request is not None and s.request.done:
+                    self.completed.append(s.request)
+                    s.request = None
+                if self.queue:
+                    s.request = self.queue.pop(0)
+                    s.pos = len(s.request.prompt)
+
+    def active_group(self) -> int:
+        return self.step_idx % self.n_groups
+
+    def next_batch(self):
+        """Returns (slot_indices, tokens [G, 1]) for the active zigzag
+        group, or None when idle. Tokens are the last generated (or last
+        prompt) token per slot."""
+        self._fill_slots()
+        g = self.active_group()
+        width = self.batch_size // self.n_groups
+        idxs = list(range(g * width, (g + 1) * width))
+        toks = []
+        live = []
+        for i in idxs:
+            r = self.slots[i].request
+            if r is None or r.done:
+                continue
+            last = r.generated[-1] if r.generated else int(r.prompt[-1])
+            toks.append(last)
+            live.append(i)
+        self.step_idx += 1
+        if not live:
+            return None
+        return live, np.asarray(toks, np.int32)[:, None]
+
+    def record(self, slot_indices: List[int], new_tokens: np.ndarray) -> None:
+        for i, tok in zip(slot_indices, new_tokens.reshape(-1)):
+            r = self.slots[i].request
+            r.generated.append(int(tok))
+            self.slots[i].pos += 1
+
+    @property
+    def utilization(self) -> float:
+        live = sum(s.request is not None and not s.request.done for s in self.slots)
+        return live / self.batch_size

@@ -1,0 +1,235 @@
+"""TriMoE serving engine: the online loop of paper §4 on the TPU runtime.
+
+Per decode step:
+  1. jitted `decode_step(..., tiered=...)` executes attention + the
+     three-tier MoE and returns per-expert token counts;
+  2. the host updates the EMA predictor (Eq. 8) with the realized loads;
+  3. hysteresis tier decisions are diffed against the current placement,
+     candidate migrations are ranked by TPU-domain cost benefit
+     (core.cost_model.TPUDomains) and budgeted into a fixed-size plan;
+  4. jitted `apply_migrations` swaps expert weights across tier buffers
+     (resharding collectives = DIMM-Link relayout), overlapping the next
+     step on real hardware via async dispatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.cost_model import ExpertShape, TPUDomains
+from repro.core.predictor import EMALoadPredictor
+from repro.core.tiers import COLD, HOT, WARM, TierThresholds
+from repro.models.layers import Params
+from repro.models.model import decode_step, layer_signature, stack_plan
+from repro.serving.tiered_moe import (
+    TierSizes,
+    apply_migrations,
+    init_tiered_state,
+    tier_sizes,
+)
+
+TIER_OF = {HOT: 0, WARM: 1, COLD: 2}
+
+
+def moe_slot_names(cfg: ModelConfig):
+    """Which scan slots (and unrolled layers) carry MoE."""
+    unrolled, n_groups, period = stack_plan(cfg)
+    slots = [f"slot{j}" for j, sig in enumerate(period) if sig[1] == "moe"]
+    layers = [f"layer{li}" for li in unrolled if layer_signature(cfg, li)[1] == "moe"]
+    return layers, slots, n_groups
+
+
+def init_tiered_for_model(rng, cfg: ModelConfig, sizes: Optional[TierSizes] = None) -> Params:
+    """Tiered states mirroring the params stacking (scan groups x slots)."""
+    if cfg.moe is None:
+        return None
+    sizes = sizes or tier_sizes(cfg)
+    layers, slots, n_groups = moe_slot_names(cfg)
+    out: Params = {}
+    for name in layers:
+        rng, k = jax.random.split(rng)
+        out[name] = init_tiered_state(k, cfg, sizes)
+    if slots:
+        def one_group(key):
+            ks = jax.random.split(key, len(slots))
+            return {s: init_tiered_state(ks[i], cfg, sizes) for i, s in enumerate(slots)}
+
+        rng, k = jax.random.split(rng)
+        out["stack"] = jax.vmap(one_group)(jax.random.split(k, n_groups))
+    return out
+
+
+def fill_tiers_from_params(params: Params, tiered: Params, cfg: ModelConfig) -> Params:
+    """Copy the flat MoE expert weights into tier buffers according to the
+    routing tables, so tiered serving is numerically identical to the
+    trained model. Works on real arrays (smoke/examples scale)."""
+    layers, slots, n_groups = moe_slot_names(cfg)
+
+    def fill_one(state, w_gate, w_up, w_down):
+        wstack = jnp.stack([w_gate, w_up, w_down.transpose(0, 2, 1)], axis=1)
+        new = dict(state)
+        tier = np.asarray(state["expert_tier"])
+        slot = np.asarray(state["expert_slot"])
+        for tid, key in enumerate(("hot", "warm", "cold")):
+            buf = np.asarray(state[key]).copy()
+            for e in np.nonzero(tier == tid)[0]:
+                buf[slot[e]] = np.asarray(wstack[e])
+            new[key] = jnp.asarray(buf)
+        return new
+
+    out = dict(tiered)
+    for name in layers:
+        ffn = params[name]["ffn"]
+        out[name] = fill_one(tiered[name], ffn["w_gate"], ffn["w_up"], ffn["w_down"])
+    if slots:
+        stack = {}
+        for s in slots:
+            per_group = []
+            for g in range(n_groups):
+                st_g = jax.tree.map(lambda a: a[g], tiered["stack"][s])
+                ffn = jax.tree.map(lambda a: a[g], params["stack"][s]["ffn"])
+                per_group.append(
+                    fill_one(st_g, ffn["w_gate"], ffn["w_up"], ffn["w_down"])
+                )
+            stack[s] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_group)
+        out["stack"] = stack
+    return out
+
+
+def strip_expert_weights(params: Params, cfg: ModelConfig) -> Params:
+    """Drop flat expert weights from serving params (they live in the tier
+    buffers); router + shared experts stay."""
+    layers, slots, n_groups = moe_slot_names(cfg)
+
+    def strip(ffn):
+        return {k: v for k, v in ffn.items() if k not in ("w_gate", "w_up", "w_down")}
+
+    out = jax.tree.map(lambda x: x, params)  # shallow copy of structure
+    out = dict(params)
+    for name in layers:
+        out[name] = {**params[name], "ffn": strip(params[name]["ffn"])}
+    if slots:
+        stack = dict(params["stack"])
+        for s in slots:
+            stack[s] = {**stack[s], "ffn": strip(stack[s]["ffn"])}
+        out["stack"] = stack
+    return out
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0
+    migrations: int = 0
+    plans: int = 0
+
+
+class TriMoEServingEngine:
+    """Host-side online loop at smoke/example scale (single device)."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Params,
+        cache: Params,
+        tiered: Params,
+        sizes: Optional[TierSizes] = None,
+        plan_size: int = 4,  # paper §5.5: up to four experts per window
+        thresholds: TierThresholds = TierThresholds(),
+    ):
+        assert cfg.moe is not None, "TriMoE engine requires a routed-MoE arch"
+        self.cfg = cfg
+        self.params = strip_expert_weights(params, cfg)
+        self.cache = cache
+        self.tiered = tiered
+        self.sizes = sizes or tier_sizes(cfg)
+        self.plan_size = plan_size
+        self.th = thresholds
+        n_moe = sum(cfg.uses_moe_layer(i) for i in range(cfg.n_layers))
+        self.predictor = EMALoadPredictor(n_moe, cfg.moe.n_experts, thresholds=thresholds)
+        self.domains = TPUDomains()
+        self.shape = ExpertShape(cfg.d_model, cfg.moe.d_expert)
+        self.stats = EngineStats()
+        self._step = jax.jit(
+            lambda p, t, c, pos, ts: decode_step(p, cfg, t, c, pos, tiered=ts)
+        )
+        self._migrate = jax.jit(apply_migrations)
+        self._layer_keys = self._flatten_layer_keys()
+
+    def _flatten_layer_keys(self) -> List[tuple]:
+        """Ordered (kind, name, group) keys, one per MoE layer."""
+        layers, slots, n_groups = moe_slot_names(self.cfg)
+        keys = [("layer", n, 0) for n in layers]
+        for g in range(n_groups):
+            for s in slots:
+                keys.append(("stack", s, g))
+        return keys
+
+    def _get_state(self, key) -> Params:
+        kind, name, g = key
+        if kind == "layer":
+            return self.tiered[name]
+        return jax.tree.map(lambda a: a[g], self.tiered["stack"][name])
+
+    # ----------------------------------------------------------- stepping
+    def step(self, tokens: jnp.ndarray, pos: int):
+        logits, self.cache, counts = self._step(
+            self.params, tokens, self.cache, jnp.int32(pos), self.tiered
+        )
+        counts = np.asarray(counts)
+        self.stats.steps += 1
+        self._replan(counts)
+        return logits
+
+    # ---------------------------------------------------------- migration
+    def _replan(self, counts: np.ndarray) -> None:
+        """Update predictor, emit migration plans per MoE layer."""
+        for li, key in enumerate(self._layer_keys):
+            self.predictor.update(li, counts[li])
+            decided = self.predictor.decide_tiers(li)
+            state = self._get_state(key)
+            cur_tier = np.array(state["expert_tier"], copy=True)
+            cur_slot = np.array(state["expert_slot"], copy=True)
+            moves = np.nonzero(decided != cur_tier)[0]
+            if len(moves) == 0:
+                continue
+            ema = self.predictor.ema[li]
+            # rank by predicted benefit under the TPU domain cost model
+            def benefit(e):
+                load = max(float(ema[e]), 1.0)
+                costs = {
+                    HOT: self.domains.t_replicated(self.shape, load),
+                    WARM: self.domains.t_striped(self.shape, load),
+                    COLD: self.domains.t_localized(self.shape, load),
+                }
+                return costs[cur_tier[e]] - costs[decided[e]]
+
+            moves = sorted(moves, key=benefit, reverse=True)[: self.plan_size]
+            plan = np.full((self.plan_size, 5), -1, np.int32)
+            for r, e in enumerate(moves):
+                dst_tier = int(decided[e])
+                # victim: lowest-EMA expert currently in the target tier
+                in_dst = np.nonzero(cur_tier == dst_tier)[0]
+                if len(in_dst) == 0:
+                    continue
+                victim = in_dst[np.argmin(ema[in_dst])]
+                e_tier, e_slot = int(cur_tier[e]), int(cur_slot[e])
+                v_slot = int(cur_slot[victim])
+                plan[r] = (e, e_tier, e_slot, dst_tier, v_slot)
+                # maintain the host mirror (swap)
+                cur_tier[victim], cur_slot[victim] = e_tier, e_slot
+                cur_tier[e], cur_slot[e] = dst_tier, v_slot
+                self.stats.migrations += 1
+            new_state = self._migrate(self._get_state(key), jnp.asarray(plan))
+            kind, name, g = key
+            if kind == "layer":
+                self.tiered[name] = new_state
+            else:
+                self.tiered["stack"][name] = jax.tree.map(
+                    lambda a, n: a.at[g].set(n), self.tiered["stack"][name], new_state
+                )
+            self.stats.plans += 1

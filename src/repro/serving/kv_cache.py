@@ -1,0 +1,43 @@
+"""KV-cache utilities for the serving engine.
+
+The model's cache pytrees (models.model.init_cache) are ring buffers of
+static length; this module adds the bookkeeping the engine needs:
+abstract (allocation-free) cache specs for the dry-run, per-arch byte
+accounting (the paper offloads the "large KV cache ... to host DIMMs",
+§4.1 — on TPU it stays HBM-resident but seq-sharded), and slot reset for
+request recycling.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import init_cache
+
+
+def cache_spec(cfg: ModelConfig, batch: int, seq: int):
+    """ShapeDtypeStruct pytree of the decode cache (no allocation)."""
+    return jax.eval_shape(lambda: init_cache(cfg, batch, seq))
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, seq: int) -> int:
+    spec = cache_spec(cfg, batch, seq)
+    return sum(
+        int(np.prod(l.shape)) * l.dtype.itemsize
+        for l in jax.tree.leaves(spec)
+        for np in (__import__("numpy"),)
+    )
+
+
+def reset_slots(cache, slot_indices):
+    """Zero the cache rows of recycled batch slots (all leaves carry the
+    batch dim first)."""
+    idx = jnp.asarray(slot_indices, jnp.int32)
+
+    def zero_rows(leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] >= int(idx.max()) + 1:
+            return leaf.at[idx].set(0)
+        return leaf
+
+    return jax.tree.map(zero_rows, cache)

@@ -1,0 +1,235 @@
+"""Tiered MoE execution — the TPU-native TriMoE runtime (DESIGN.md §2.2).
+
+Expert weights live in three buffers whose *sharding* realizes the
+paper's three compute domains:
+
+  hot   [n_hot,  3, D, F]  replicated            (GPU-HBM-resident tier:
+                                                  zero collective traffic)
+  warm  [n_warm, 3, D, F]  striped over `model`  (AMX-CPU tier: every chip
+                                                  cooperates, reduce over ICI
+                                                  amortized by token count)
+  cold  [n_cold, 3, D, F]  localized over the    (DIMM-NDP tier: tokens
+                           full mesh (expert dim) travel to the expert,
+                                                  weights never move)
+
+Routing tables (expert_tier[E], expert_slot[E]) are step inputs produced
+by the host-side scheduler; migrations between steps move experts across
+buffers with resharding collectives — the DIMM-Link relayout analogue.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init
+from repro.models.moe import grouped_ffn, router_topk, shared_ffn
+
+HOT_T, WARM_T, COLD_T = 0, 1, 2
+TIER_KEYS = ("hot", "warm", "cold")
+
+
+class TierSizes(NamedTuple):
+    n_hot: int
+    n_warm: int
+    n_cold: int
+
+
+def tier_sizes(cfg, n_chips: int = 256, hbm_budget_frac: float = 0.15) -> TierSizes:
+    """Size the tiers so the replicated hot buffer fits its HBM budget and
+    warm stays affordable when striped over the model axis; everything
+    else is cold (localized). Mirrors the paper's HBM-capacity-driven hot
+    set with the DIMM pool as the elastic tail."""
+    from repro.hardware import TPU_V5E
+
+    mo = cfg.moe
+    w_bytes = 3 * cfg.d_model * mo.d_expert * 2
+    n_moe_layers = max(1, sum(cfg.uses_moe_layer(i) for i in range(cfg.n_layers)))
+    budget = TPU_V5E.hbm_bytes * hbm_budget_frac
+    n_hot = max(1, min(mo.n_experts // 4, int(budget / (w_bytes * n_moe_layers))))
+    n_warm = max(1, min(mo.n_experts - n_hot - 1, int(round(0.30 * mo.n_experts))))
+    n_cold = mo.n_experts - n_hot - n_warm
+    return TierSizes(n_hot, n_warm, n_cold)
+
+
+def init_tiered_state(rng, cfg, sizes: TierSizes, pad_cold_to: int = 16) -> Params:
+    """Tier buffers + routing tables for one MoE layer.
+
+    Initial assignment: experts [0, n_hot) hot, [n_hot, n_hot+n_warm)
+    warm, rest cold — the host engine re-ranks by offline trace analysis
+    before serving and migrates thereafter. The cold buffer is padded to
+    a multiple of the mesh's data axis so the localized (expert-sharded)
+    layout always divides.
+    """
+    mo = cfg.moe
+    d, f = cfg.d_model, mo.d_expert
+    dt = jnp.dtype(cfg.param_dtype)
+    e = mo.n_experts
+    ks = jax.random.split(rng, 3)
+
+    def buf(key, n):
+        return dense_init(key, (n, 3, d, f), dt)
+
+    n_hot, n_warm, n_cold = sizes
+    n_cold_slots = -(-n_cold // pad_cold_to) * pad_cold_to
+    tier = jnp.concatenate(
+        [
+            jnp.full((n_hot,), HOT_T, jnp.int32),
+            jnp.full((n_warm,), WARM_T, jnp.int32),
+            jnp.full((n_cold,), COLD_T, jnp.int32),
+        ]
+    )
+    slot = jnp.concatenate(
+        [
+            jnp.arange(n_hot, dtype=jnp.int32),
+            jnp.arange(n_warm, dtype=jnp.int32),
+            jnp.arange(n_cold, dtype=jnp.int32),
+        ]
+    )
+    return {
+        "hot": buf(ks[0], n_hot),
+        "warm": buf(ks[1], n_warm),
+        "cold": buf(ks[2], n_cold_slots),
+        "expert_tier": tier,
+        "expert_slot": slot,
+    }
+
+
+def _tier_ffn(w: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """w: [n, 3, D, F]; h: [n, C, D] -> [n, C, D]."""
+    return grouped_ffn(h, w[:, 0], w[:, 1], w[:, 2].transpose(0, 2, 1))
+
+
+def _dispatch_tier(flat, st, sw, tier_slot, in_tier, n_slots, cap):
+    """Scatter this tier's assignments into [n_slots, cap, D] buffers."""
+    t, d = flat.shape[0], flat.shape[1]
+    # rank within (tier, slot): count prior occurrences via sorted trick
+    key = jnp.where(in_tier, tier_slot, n_slots)
+    order = jnp.argsort(key, stable=True)
+    ks = key[order]
+    pos_sorted = jnp.arange(len(ks), dtype=jnp.int32) - jnp.searchsorted(
+        ks, ks, side="left"
+    ).astype(jnp.int32)
+    pos = jnp.zeros_like(pos_sorted).at[order].set(pos_sorted)
+    ok = in_tier & (pos < cap)
+    dst = jnp.where(ok, key * cap + pos, n_slots * cap)
+    buf = jnp.zeros((n_slots * cap + 1, d), flat.dtype).at[dst].set(flat[st])
+    return buf[: n_slots * cap].reshape(n_slots, cap, d), dst, ok
+
+
+def tiered_moe_forward(
+    p: Params,  # model params for this layer's ffn: router (+ shared)
+    state: Params,  # tier buffers + routing tables
+    cfg,
+    x: jnp.ndarray,  # [B, S, D] (decode: S == 1)
+    cold_capacity_frac: float = 0.25,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y, expert_counts[E]).
+
+    cold_capacity_frac (§Perf): cold experts are low-load by scheduling
+    invariant (relayout re-stripes anything above tau_cold), so their
+    dispatch buffers run at a fraction of the dropless capacity; 1.0
+    restores exact dropless behavior."""
+    mo = cfg.moe
+    e, k = mo.n_experts, mo.top_k
+    b, s, d = x.shape
+    t = b * s
+    flat = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", flat.astype(jnp.float32), p["router"])
+    _, w, idx = router_topk(logits, k)
+
+    a_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    a_exp = idx.reshape(-1).astype(jnp.int32)
+    a_w = w.reshape(-1)
+
+    a_tier = state["expert_tier"][a_exp]
+    a_slot = state["expert_slot"][a_exp]
+
+    y = jnp.zeros((t, d), x.dtype)
+    for tid, key in enumerate(TIER_KEYS):
+        n_slots = state[key].shape[0]
+        # hot/warm serve any skew droplessly; cold buffers run at the
+        # invariant-backed reduced capacity
+        cap = t if tid != COLD_T else max(
+            mo.top_k, int(t * cold_capacity_frac + 0.999)
+        )
+        h, dst, ok = _dispatch_tier(
+            flat, a_tok, a_w, a_slot, a_tier == tid, n_slots, cap
+        )
+        o = _tier_ffn(state[key], h)
+        obuf = jnp.concatenate(
+            [o.reshape(n_slots * cap, d), jnp.zeros((1, d), o.dtype)]
+        )
+        contrib = obuf[dst] * (a_w * ok)[:, None].astype(o.dtype)
+        y = y.at[a_tok].add(contrib)
+
+    y = y.reshape(b, s, d)
+    if mo.n_shared:
+        y = y + shared_ffn(p["shared"], x)
+    counts = jnp.zeros((e,), jnp.int32).at[a_exp].add(1)
+    return y, counts
+
+
+# ------------------------------------------------------------ migrations
+def apply_migrations(state: Params, plan: jnp.ndarray) -> Params:
+    """Execute a fixed-size migration plan (padded with no-ops).
+
+    plan: [M, 5] int32 rows (expert_a, tier_a, slot_a, tier_b, slot_b):
+    swap the weights living at (tier_a, slot_a) and (tier_b, slot_b) and
+    update the routing tables for the two experts involved. A row with
+    expert_a < 0 is a no-op. On hardware each swap lowers to resharding
+    collectives between differently-sharded buffers — the DIMM-Link
+    relayout/rebalance analogue, overlapped with the next step's compute.
+    """
+
+    def one(state, row):
+        ea, ta, sa, tb, sb = row[0], row[1], row[2], row[3], row[4]
+
+        def do(state):
+            bufs = [state["hot"], state["warm"], state["cold"]]
+
+            def get(tid, slot):
+                return jax.lax.switch(
+                    tid,
+                    [lambda s=s: jax.lax.dynamic_index_in_dim(bufs[s], slot, 0)
+                     for s in range(3)],
+                )
+
+            wa = get(ta, sa)
+            wb = get(tb, sb)
+            new_bufs = []
+            for tid in range(3):
+                buf = bufs[tid]
+                buf = jax.lax.cond(
+                    ta == tid,
+                    lambda b: jax.lax.dynamic_update_index_in_dim(b, wb[0], sa, 0),
+                    lambda b: b,
+                    buf,
+                )
+                buf = jax.lax.cond(
+                    tb == tid,
+                    lambda b: jax.lax.dynamic_update_index_in_dim(b, wa[0], sb, 0),
+                    lambda b: b,
+                    buf,
+                )
+                new_bufs.append(buf)
+            # table update: expert at (tb, sb) before the swap moves to (ta, sa)
+            occupant_b = jnp.argmax(
+                (state["expert_tier"] == tb) & (state["expert_slot"] == sb)
+            ).astype(jnp.int32)
+            tier = state["expert_tier"].at[ea].set(tb).at[occupant_b].set(ta)
+            slot = state["expert_slot"].at[ea].set(sb).at[occupant_b].set(sa)
+            return {
+                "hot": new_bufs[0],
+                "warm": new_bufs[1],
+                "cold": new_bufs[2],
+                "expert_tier": tier,
+                "expert_slot": slot,
+            }
+
+        return jax.lax.cond(ea >= 0, do, lambda s: s, state), None
+
+    state, _ = jax.lax.scan(one, state, plan)
+    return state

@@ -1,0 +1,12 @@
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.training.train_step import (
+    cross_entropy,
+    init_train_state,
+    loss_fn,
+    make_train_step,
+)
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "cross_entropy",
+    "init_train_state", "loss_fn", "make_train_step",
+]

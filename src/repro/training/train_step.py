@@ -1,0 +1,84 @@
+"""Training step: CE + MoE aux loss, remat over the layer scan, optional
+microbatch gradient accumulation, AdamW/ZeRO update.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import forward_train
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+Params = Any
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """logits: [B, S, V]; labels: [B, S] int32 -> scalar mean CE."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    picked = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, Any]):
+    logits, aux, counts = forward_train(params, cfg, batch)
+    ce = cross_entropy(logits, batch["labels"])
+    return ce + aux, {"ce": ce, "aux": aux, "expert_counts": counts}
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    n_microbatches: int = 1,
+):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). With n_microbatches > 1, gradients accumulate over a scan of
+    microbatch slices (memory for activations scales with 1/n)."""
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, cfg, batch)
+        return loss, metrics, grads
+
+    def accumulated(params, batch):
+        def split(x):
+            return x.reshape(n_microbatches, x.shape[0] // n_microbatches, *x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+
+        def body(acc, mbatch):
+            (loss, metrics), grads = grad_fn(params, cfg, mbatch)
+            acc_grads, acc_loss, acc_ce = acc
+            acc_grads = jax.tree.map(jnp.add, acc_grads, grads)
+            return (acc_grads, acc_loss + loss, acc_ce + metrics["ce"]), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss, ce), _ = jax.lax.scan(
+            body, (zeros, jnp.zeros(()), jnp.zeros(())), mb
+        )
+        n = float(n_microbatches)
+        grads = jax.tree.map(lambda g: g / n, grads)
+        return loss / n, {"ce": ce / n, "aux": loss * 0.0, "expert_counts": None}, grads
+
+    def train_step(params, opt_state, batch):
+        if n_microbatches > 1:
+            loss, metrics, grads = accumulated(params, batch)
+        else:
+            loss, metrics, grads = single(params, batch)
+        params, opt_state = adamw_update(params, grads, opt_state, opt_cfg)
+        out_metrics = {"loss": loss, "ce": metrics["ce"]}
+        return params, opt_state, out_metrics
+
+    return train_step
+
+
+def init_train_state(rng, cfg: ModelConfig, opt_cfg: AdamWConfig = AdamWConfig()):
+    from repro.models.model import init_params
+
+    params = init_params(rng, cfg)
+    return params, adamw_init(params, opt_cfg)

@@ -1,0 +1,13 @@
+import os
+
+# Tests run on ONE CPU device (the dry-run alone forces 512); keep any
+# accidental device-count flags out of the test environment.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

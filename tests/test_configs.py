@@ -1,0 +1,80 @@
+import pytest
+
+from repro.configs import (
+    ALL_SHAPES,
+    ASSIGNED,
+    cells,
+    get_config,
+    get_shape,
+    reduce_for_smoke,
+    shape_applicable,
+)
+
+PUBLISHED_PARAMS = {  # billions, tolerance band
+    "jamba-v0.1-52b": (48, 56),
+    "chameleon-34b": (30, 38),
+    "granite-20b": (18, 30),
+    "phi4-mini-3.8b": (3.5, 5.0),
+    "qwen2.5-32b": (29, 36),
+    "llama3.2-3b": (2.8, 3.8),
+    "xlstm-125m": (0.10, 0.20),
+    "seamless-m4t-large-v2": (1.6, 2.7),
+    "deepseek-v2-236b": (225, 250),
+    "granite-moe-1b-a400m": (1.0, 1.7),
+}
+
+PUBLISHED_ACTIVE = {
+    "jamba-v0.1-52b": (10, 14),
+    "deepseek-v2-236b": (20, 30),
+    "granite-moe-1b-a400m": (0.3, 0.6),
+}
+
+
+def test_registry_has_all_assigned():
+    assert len(ASSIGNED) == 10
+    for a in ASSIGNED:
+        assert get_config(a).name == a
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_param_counts_match_published(arch):
+    lo, hi = PUBLISHED_PARAMS[arch]
+    count = get_config(arch).param_count() / 1e9
+    assert lo <= count <= hi, f"{arch}: {count:.2f}B outside [{lo}, {hi}]"
+
+
+@pytest.mark.parametrize("arch", sorted(PUBLISHED_ACTIVE))
+def test_active_params_match_published(arch):
+    lo, hi = PUBLISHED_ACTIVE[arch]
+    count = get_config(arch).active_param_count() / 1e9
+    assert lo <= count <= hi
+
+
+def test_cells_cover_40_with_documented_skips():
+    all_cells = list(cells(include_inapplicable=True))
+    assert len(all_cells) == 40
+    skips = [c for c in all_cells if len(c) == 3]
+    # long_500k skipped exactly for the 8 pure-full-attention archs
+    assert len(skips) == 8
+    assert all(c[1] == "long_500k" for c in skips)
+    runnable = {(c[0], c[1]) for c in all_cells if len(c) == 2}
+    assert ("jamba-v0.1-52b", "long_500k") in runnable
+    assert ("xlstm-125m", "long_500k") in runnable
+
+
+def test_shapes():
+    names = {s.name for s in ALL_SHAPES}
+    assert names == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    assert get_shape("decode_32k").kind == "decode"
+    assert get_shape("train_4k").global_batch == 256
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_reduced_configs_same_family(arch):
+    cfg = get_config(arch)
+    r = reduce_for_smoke(cfg)
+    assert r.family == cfg.family
+    assert (r.moe is None) == (cfg.moe is None)
+    assert (r.mla is None) == (cfg.mla is None)
+    assert (r.encdec is None) == (cfg.encdec is None)
+    assert r.param_count() < 50e6

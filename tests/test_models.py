@@ -1,0 +1,111 @@
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_config, reduce_for_smoke
+from repro.models import (
+    decode_step,
+    forward_train,
+    init_cache,
+    init_params,
+    prefill,
+    stack_plan,
+)
+
+
+def _smoke_cfg(arch, dropless=False):
+    cfg = reduce_for_smoke(get_config(arch))
+    if dropless and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=100.0)
+        )
+    return cfg
+
+
+def _batch(cfg, rng, b, s):
+    out = {"tokens": jax.random.randint(rng, (b, s), 0, cfg.vocab_size)}
+    if cfg.encdec is not None:
+        out["frames"] = jax.random.normal(
+            rng, (b, cfg.encdec.frontend_frames, cfg.d_model), jnp.bfloat16
+        )
+    return out
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_forward_train_shapes_and_finiteness(arch, rng):
+    cfg = _smoke_cfg(arch)
+    params = init_params(rng, cfg)
+    b, s = 2, 16
+    batch = _batch(cfg, rng, b, s)
+    logits, aux, counts = forward_train(params, cfg, batch)
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    assert float(aux) >= 0.0
+    if cfg.moe is not None:
+        assert counts.shape[-1] == cfg.moe.n_experts
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_prefill_decode_matches_full_forward(arch, rng):
+    """prefill(S) + decode(token S) == forward over S+1 tokens (dropless)."""
+    cfg = _smoke_cfg(arch, dropless=True)
+    params = init_params(rng, cfg)
+    b, s = 2, 15
+    toks = jax.random.randint(rng, (b, s + 1), 0, cfg.vocab_size)
+    bf = {"tokens": toks}
+    bp = {"tokens": toks[:, :s]}
+    if cfg.encdec is not None:
+        fr = jax.random.normal(
+            rng, (b, cfg.encdec.frontend_frames, cfg.d_model), jnp.bfloat16
+        )
+        bf["frames"] = fr
+        bp["frames"] = fr
+    full, _, _ = forward_train(params, cfg, bf)
+    _, cache = prefill(params, cfg, bp, cache_len=s + 1)
+    dec, _, _ = decode_step(params, cfg, toks[:, s : s + 1], cache, jnp.int32(s))
+    ref = np.asarray(full[:, s], np.float32)
+    got = np.asarray(dec, np.float32)
+    rel = np.max(np.abs(ref - got)) / (np.max(np.abs(ref)) + 1e-9)
+    assert rel < 0.03, f"{arch}: rel err {rel}"
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "xlstm-125m", "jamba-v0.1-52b"])
+def test_multi_step_decode_runs(arch, rng):
+    cfg = _smoke_cfg(arch, dropless=True)
+    params = init_params(rng, cfg)
+    b, s = 2, 8
+    batch = _batch(cfg, rng, b, s)
+    _, cache = prefill(params, cfg, batch, cache_len=s + 4)
+    tok = batch["tokens"][:, -1:]
+    for i in range(4):
+        logits, cache, _ = decode_step(params, cfg, tok, cache, jnp.int32(s + i))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+def test_stack_plans():
+    assert stack_plan(get_config("deepseek-v2-236b"))[0] == [0]
+    assert stack_plan(get_config("deepseek-v2-236b"))[1] == 59
+    _, n, period = stack_plan(get_config("jamba-v0.1-52b"))
+    assert n == 4 and len(period) == 8
+    mixers = [p[0] for p in period]
+    assert mixers.count("attn") == 1 and mixers.count("mamba") == 7
+    ffns = [p[1] for p in period]
+    assert ffns.count("moe") == 4  # every other layer
+
+
+def test_decode_ring_buffer_wraparound(rng):
+    """Decoding past the cache length must keep working (sliding window)."""
+    cfg = _smoke_cfg("llama3.2-3b")
+    params = init_params(rng, cfg)
+    b, s = 1, 8
+    batch = _batch(cfg, rng, b, s)
+    _, cache = prefill(params, cfg, batch)  # cache_len == 8
+    tok = batch["tokens"][:, -1:]
+    for i in range(12):  # wraps past 8
+        logits, cache, _ = decode_step(params, cfg, tok, cache, jnp.int32(s + i))
+        assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)

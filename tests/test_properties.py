@@ -1,0 +1,111 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import CPU, GPU, LOCALIZED, NDP, STRIPED, CostModel, ExpertShape
+from repro.core.predictor import EMALoadPredictor
+from repro.core.scheduler import ExpertPlacement, MakespanScheduler
+from repro.core.tiers import COLD, HOT, TierThresholds, classify
+
+CM = CostModel()
+SHAPE = ExpertShape(1024, 512)
+
+
+loads_strategy = st.lists(
+    st.integers(min_value=0, max_value=600), min_size=4, max_size=48
+)
+
+
+@st.composite
+def workload(draw):
+    loads = np.asarray(draw(loads_strategy), np.float64)
+    placements = []
+    for i in range(len(loads)):
+        layout = draw(st.sampled_from([STRIPED, LOCALIZED]))
+        dimm = draw(st.integers(0, CM.hw.n_dimms - 1)) if layout == LOCALIZED else -1
+        cached = draw(st.booleans())
+        placements.append(ExpertPlacement(layout, dimm, gpu_cached=cached))
+    return loads, placements
+
+
+@settings(max_examples=30, deadline=None)
+@given(workload())
+def test_schedule_invariants(wl):
+    loads, placements = wl
+    sched = MakespanScheduler(CM, SHAPE)
+    sc = sched.schedule(loads, placements)
+    # every active expert gets a finite-cost device
+    for i, dev in enumerate(sc.assign):
+        if loads[i] > 0:
+            assert np.isfinite(sched.device_cost(dev, loads[i], placements[i]))
+            # Eq. 4: NDP only for localized
+            if dev == NDP:
+                assert placements[i].layout == LOCALIZED
+    # makespan equals the max of the recomputed domain totals
+    assert sc.makespan == max(sc.gpu_time, sc.cpu_time, sc.dimm_times.max())
+    # makespan never exceeds all-on-one-device serial execution
+    for dev in (GPU, CPU):
+        serial = sum(
+            sched.device_cost(dev, l, p)
+            for l, p in zip(loads, placements) if l > 0
+        )
+        assert sc.makespan <= serial + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(loads_strategy)
+def test_classify_monotonic(loads):
+    """Higher load never yields a colder tier."""
+    loads = np.asarray(loads)
+    tiers = classify(loads)
+    order = np.argsort(loads)
+    sorted_tiers = tiers[order]
+    # tiers ids: HOT=0 < WARM=1 < COLD=2; ascending loads -> non-increasing ids
+    assert (np.diff(sorted_tiers.astype(int)) <= 0).all() or len(loads) < 2
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(st.floats(0, 1000, allow_nan=False), min_size=3, max_size=40),
+    st.floats(0.05, 0.95),
+)
+def test_ema_stays_in_hull(series, alpha):
+    """EMA is a convex combination: bounded by observed extremes."""
+    p = EMALoadPredictor(1, 1, alpha=alpha)
+    for v in series:
+        p.update(0, np.array([v], np.float32))
+    assert min(series) - 1e-3 <= float(p.ema[0, 0]) <= max(series) + 1e-3
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 500), st.integers(0, 1))
+def test_cost_model_monotone_in_load(load, layout_id):
+    """More tokens never cost less on any device path."""
+    layout = STRIPED if layout_id == 0 else LOCALIZED
+    for fn in (
+        lambda l: CM.t_gpu_hit(SHAPE, l),
+        lambda l: CM.t_gpu_miss(SHAPE, l, layout),
+        lambda l: CM.t_cpu(SHAPE, l, layout),
+        lambda l: CM.t_ndp(SHAPE, l),
+    ):
+        assert fn(load + 1) >= fn(load) - 1e-12
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 64), st.integers(1, 8))
+def test_moe_dispatch_conservation(t, k):
+    """Sort-based dispatch output counts are conserved (jnp-level)."""
+    import jax, jax.numpy as jnp
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.models.moe import init_moe, moe_forward
+
+    cfg = reduce_for_smoke(get_config("granite-moe-1b-a400m"))
+    k = min(k, cfg.moe.n_experts)
+    import dataclasses
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, top_k=k))
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(t * 31 + k), (1, t, cfg.d_model),
+                          jnp.bfloat16)
+    out = moe_forward(p, cfg, x, full_capacity=True)
+    assert int(out.expert_counts.sum()) == t * k
+    assert np.all(np.isfinite(np.asarray(out.y, np.float32)))

@@ -1,0 +1,62 @@
+"""Unit tests for the scan-aware HLO roofline parser."""
+import os
+import sys
+import textwrap
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.roofline import parse_hlo, analyze_computations, scan_aware_totals, trip_count
+
+HLO = textwrap.dedent("""\
+    HloModule jit_step, is_scheduled=true
+
+    %body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %p = (s32[], f32[8,16]) parameter(0)
+      %w = f32[16,32]{1,0} constant(0)
+      %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+      %d = f32[8,32]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,32]{1,0} all-reduce(%d), replica_groups={}
+      %i = s32[] get-tuple-element(%p), index=0
+    }
+
+    %cond (pc: (s32[], f32[8,16])) -> pred[] {
+      %pc = (s32[], f32[8,16]) parameter(0)
+      %iter = s32[] get-tuple-element(%pc), index=0
+      %c = s32[] constant(12)
+      ROOT %lt = pred[] compare(%iter, %c), direction=LT
+    }
+
+    ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+      %a = f32[8,16]{1,0} parameter(0)
+      %t = (s32[], f32[8,16]) tuple(%a)
+      %wl = (s32[], f32[8,16]) while(%t), condition=%cond, body=%body
+      %g = f32[4,16]{1,0} dot(%a, %a), lhs_contracting_dims={0}, rhs_contracting_dims={0}
+    }
+    """)
+
+
+def test_computation_split_and_entry():
+    comps, entry = parse_hlo(HLO)
+    assert entry == "main"
+    assert {"body", "cond", "main"} <= set(comps)
+    assert len(comps["body"].lines) >= 4
+
+
+def test_trip_count_from_condition():
+    comps, _ = parse_hlo(HLO)
+    analyze_computations(comps)
+    assert trip_count(comps, "cond") == 12
+
+
+def test_scan_aware_flops_multiply_loop_bodies():
+    totals = scan_aware_totals(HLO)
+    # body dot: 2*8*32*16 = 8192 flops x 12 trips; entry dot 2*4*16*8=1024
+    assert totals["flops"] == 8192 * 12 + 2 * 4 * 16 * 8
+    # all-reduce bytes: 8*32*4 = 1024 per iteration x 12
+    assert totals["all-reduce"] == 1024 * 12
+
+
+def test_dot_contraction_resolved_from_symbols():
+    comps, _ = parse_hlo(HLO)
+    analyze_computations(comps)
+    assert comps["body"].flops == 2 * 8 * 32 * 16

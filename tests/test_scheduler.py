@@ -1,0 +1,124 @@
+import numpy as np
+import pytest
+
+from repro.core.cost_model import (
+    CPU,
+    GPU,
+    LOCALIZED,
+    NDP,
+    STRIPED,
+    CostModel,
+    ExpertShape,
+    GPU_L_HALF,
+)
+from repro.core.scheduler import ExpertPlacement, MakespanScheduler
+
+SHAPE = ExpertShape(5120, 1536)  # deepseek-v2 expert
+
+
+@pytest.fixture
+def cm():
+    return CostModel()
+
+
+@pytest.fixture
+def sched(cm):
+    return MakespanScheduler(cm, SHAPE)
+
+
+def test_cost_model_anchors(cm):
+    # Fig 5a: H100 reaches ~30% utilization at 256 tokens
+    t = cm.t_gpu_hit(SHAPE, 256)
+    implied_util = SHAPE.flops(256) / (t * cm.hw.gpu_flops)
+    assert abs(implied_util - 0.30) < 0.02
+    # NDP compute/bandwidth breakeven ~1.7 tokens
+    assert cm.f_calc_ndp(SHAPE, 2) > cm.t_internal(SHAPE.weight_bytes)
+    assert cm.f_calc_ndp(SHAPE, 1) < cm.t_internal(SHAPE.weight_bytes)
+
+
+def test_eq2_gpu_miss_is_max_of_terms(cm):
+    t = cm.t_gpu_miss(SHAPE, 10, STRIPED)
+    assert t == pytest.approx(cm.t_pcie(SHAPE.weight_bytes))  # PCIe dominates
+    t_loc = cm.t_gpu_miss(SHAPE, 10, LOCALIZED)
+    assert t_loc == pytest.approx(cm.t_dram(SHAPE.weight_bytes, LOCALIZED))
+
+
+def test_eq4_ndp_requires_localized(sched):
+    pl = ExpertPlacement(STRIPED, -1)
+    assert sched.device_cost(NDP, 10, pl) == float("inf")
+    pl = ExpertPlacement(LOCALIZED, 3)
+    assert np.isfinite(sched.device_cost(NDP, 10, pl))
+
+
+def _mixed_workload(e=64, seed=0):
+    rng = np.random.default_rng(seed)
+    loads = np.concatenate([
+        rng.integers(250, 500, 2),      # hot
+        rng.integers(20, 150, 18),      # warm
+        rng.integers(0, 6, e - 20),     # cold tail
+    ]).astype(np.float64)
+    placements = []
+    for i in range(e):
+        if i < 2:
+            placements.append(ExpertPlacement(STRIPED, -1, gpu_cached=True))
+        elif i < 20:
+            placements.append(ExpertPlacement(STRIPED, -1))
+        else:
+            placements.append(ExpertPlacement(LOCALIZED, i % 16))
+    return loads, placements
+
+
+def test_schedule_respects_tier_affinity(sched):
+    loads, placements = _mixed_workload()
+    sc = sched.schedule(loads, placements)
+    # cached hot experts stay on GPU
+    assert sc.assign[0] == GPU and sc.assign[1] == GPU
+    # the cold tail lands mostly on NDP
+    cold = sc.assign[20:][loads[20:] > 0]
+    assert (cold == NDP).mean() > 0.7
+    # warm experts avoid NDP (compute bottleneck, paper §3.1)
+    warm = sc.assign[2:20]
+    assert (warm == NDP).mean() < 0.2
+
+
+def test_refinement_never_hurts(cm):
+    loads, placements = _mixed_workload(seed=3)
+    greedy_only = MakespanScheduler(cm, SHAPE, max_iters=0)
+    refined = MakespanScheduler(cm, SHAPE, max_iters=64)
+    m0 = greedy_only.schedule(loads, placements).makespan
+    m1 = refined.schedule(loads, placements).makespan
+    assert m1 <= m0 + 1e-12
+
+
+def test_makespan_lower_bound(sched):
+    """Makespan >= best single-expert cost and <= serial everything."""
+    loads, placements = _mixed_workload(seed=5)
+    sc = sched.schedule(loads, placements)
+    serial = sum(
+        min(
+            sched.device_cost(d, loads[i], placements[i])
+            for d in (GPU, CPU, NDP)
+        )
+        for i in range(len(loads))
+        if loads[i] > 0
+    )
+    assert sc.makespan <= serial
+    best_single = max(
+        min(sched.device_cost(d, loads[i], placements[i]) for d in (GPU, CPU, NDP))
+        for i in range(len(loads))
+        if loads[i] > 0
+    )
+    assert sc.makespan >= best_single - 1e-12
+
+
+def test_contention_striped_touches_all_dimms(sched):
+    pl = ExpertPlacement(STRIPED, -1)
+    c = sched._contention(CPU, pl)
+    assert (c > 0).all()
+    pl = ExpertPlacement(LOCALIZED, 5)
+    c = sched._contention(CPU, pl)
+    assert c[5] > 0 and (np.delete(c, 5) == 0).all()
+    # NDP execution and GPU cache hits generate no host DRAM contention
+    assert (sched._contention(NDP, pl) == 0).all()
+    pl_hit = ExpertPlacement(STRIPED, -1, gpu_cached=True)
+    assert (sched._contention(GPU, pl_hit) == 0).all()

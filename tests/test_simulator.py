@@ -1,0 +1,78 @@
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.simulator import SimFlags, SimModel, TriMoESimulator, simulate
+from repro.core.traces import TraceSpec, generate_trace, trace_for_model
+
+CFG = get_config("granite-moe-1b-a400m")  # small => fast simulation
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return trace_for_model(CFG, 256, n_steps=12, seed=0)
+
+
+def _run(policy, trace, **kw):
+    model = SimModel.from_config(CFG)
+    flags = SimFlags(policy=policy, warmup_steps=4, **kw)
+    return TriMoESimulator(model, trace, flags).run(8)
+
+
+def test_trimoe_beats_all_baselines(trace):
+    times = {p: _run(p, trace).moe_time for p in ("klotski", "enkt", "monde", "trimoe")}
+    best_baseline = min(v for k, v in times.items() if k != "trimoe")
+    assert times["trimoe"] < best_baseline
+
+
+def test_policies_produce_positive_utilization(trace):
+    r = _run("trimoe", trace)
+    assert 0 < r.utils["cpu"] <= 1.0
+    assert 0 < r.utils["ndp"] <= 1.0
+    assert 0 < r.utils["gpu"] <= 1.0
+
+
+def test_migration_overhead_within_paper_bound(trace):
+    r = _run("trimoe", trace)
+    assert r.migration_overhead / r.step_time < 0.033  # paper §5.5: <3.3%
+
+
+def test_predictor_accuracy_in_paper_band(trace):
+    r = _run("trimoe", trace)
+    assert r.migration_accuracy >= 0.70  # paper: >78% on their traces
+
+
+def test_ablation_components_never_hurt(trace):
+    base = _run("gpu_ndp", trace)
+    cpu = _run("trimoe", trace, enable_refinement=False, enable_relayout=False)
+    ref = _run("trimoe", trace, enable_refinement=True, enable_relayout=False)
+    rel = _run("trimoe", trace, enable_refinement=True, enable_relayout=True)
+    assert cpu.moe_time < base.moe_time  # +CPU is the big win (Fig 8)
+    assert ref.moe_time <= cpu.moe_time * 1.05
+    assert rel.moe_time <= ref.moe_time * 1.10
+
+
+# Sensitivity physics is pronounced on the paper's flagship workload
+DSV2 = get_config("deepseek-v2-236b")
+
+
+def test_ndp_count_sensitivity_saturates():
+    """Fig 9a: latency improves with NDP count and flattens by 16."""
+    times = {}
+    for nd in (4, 16, 32):
+        r = simulate(DSV2, 512, flags=SimFlags(policy="trimoe", n_dimms=nd,
+                                               warmup_steps=2), n_steps=3)
+        times[nd] = r.moe_time
+    assert times[4] > times[16] * 1.3  # 4 -> 16 is a big win
+    assert times[32] > times[16] * 0.85  # 16 -> 32 is marginal (saturated)
+
+
+def test_cpu_flops_sensitivity_flattens():
+    """Fig 9b: >=0.5x AMX is enough; below that, latency climbs."""
+    t = {}
+    for s in (0.125, 0.5, 2.0):
+        r = simulate(DSV2, 512, flags=SimFlags(policy="trimoe", cpu_flops_scale=s,
+                                               warmup_steps=2), n_steps=3)
+        t[s] = r.moe_time
+    assert t[0.125] > t[0.5] * 1.10
+    assert t[0.5] < t[2.0] * 1.25  # flat beyond 0.5x

@@ -1,0 +1,48 @@
+import numpy as np
+
+from repro.core.predictor import EMALoadPredictor
+from repro.core.tiers import tier_stats
+from repro.core.traces import TraceSpec, generate_trace
+
+
+SPEC = TraceSpec(n_steps=48, n_layers=6, n_experts=160, top_k=6,
+                 tokens_per_step=512)
+
+
+def test_trace_conservation():
+    tr = generate_trace(SPEC)
+    assert tr.shape == (48, 6, 160)
+    # every (step, layer) distributes exactly tokens * top_k assignments
+    np.testing.assert_array_equal(
+        tr.sum(-1), np.full((48, 6), 512 * 6)
+    )
+    # no expert exceeds the per-token cap
+    assert tr.max() <= 512
+
+
+def test_trace_matches_fig3_marginals():
+    tr = generate_trace(SPEC)
+    st = tier_stats(tr.reshape(-1, 160))
+    assert 0.55 <= st["cold_expert_frac"] <= 0.85  # paper: ~70%
+    assert st["cold_token_frac"] <= 0.15  # paper: ~8%
+    assert 0.15 <= st["warm_expert_frac"] <= 0.45  # paper: 20-40%
+    assert 0.45 <= st["warm_token_frac"] <= 0.80  # paper: up to ~70%
+
+
+def test_trace_determinism():
+    a = generate_trace(SPEC)
+    b = generate_trace(SPEC)
+    np.testing.assert_array_equal(a, b)
+    c = generate_trace(TraceSpec(**{**SPEC.__dict__, "seed": 1}))
+    assert not np.array_equal(a, c)
+
+
+def test_predictor_band_on_traces():
+    tr = generate_trace(SPEC)
+    pred = EMALoadPredictor(6, 160)
+    for t in range(48):
+        for l in range(6):
+            pred.update(l, tr[t, l])
+    # paper: >78% migration decision accuracy
+    assert pred.stats.migration_accuracy >= 0.70
+    assert pred.stats.accuracy >= 0.85
