@@ -1,9 +1,11 @@
 """TriMoE tiered serving end-to-end: the paper's online loop on the TPU
 runtime (smoke scale on CPU).
 
-Drives launch/serve.py: zigzag-batched requests decode through the
-three-tier MoE (hot=replicated / warm=striped / cold=localized) while the
-EMA predictor migrates experts between tiers in the background.
+Drives launch/serve.py's continuous-batching ServingLoop: requests with
+staggered prompt lengths are admitted into zigzag decode groups; the
+three-tier MoE (hot=replicated / warm=striped / cold=localized) serves
+every step while the EMA predictor migrates experts between tiers in
+the gaps between group steps.
 
   PYTHONPATH=src python examples/serve_moe_offload.py
 """
@@ -15,6 +17,8 @@ if __name__ == "__main__":
         "--smoke",
         "--requests", "8",
         "--batch", "4",
+        "--groups", "2",
         "--prompt-len", "12",
+        "--stagger", "3",
         "--new-tokens", "16",
     ])

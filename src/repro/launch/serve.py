@@ -1,29 +1,51 @@
-"""End-to-end serving driver: TriMoE tiered decode with zigzag batching.
+"""End-to-end serving driver: continuous-batching TriMoE serving loop.
 
-Runs the full online loop at example scale: prefill requests, decode with
-the three-tier MoE runtime, EMA prediction + migration between steps.
+Runs the full online system at example scale: queued requests with
+staggered prompt lengths are admitted into decode slots (per-request
+prefill through the tiered MoE runtime), zigzag groups decode at
+per-slot positions, and expert migrations replan in the gaps between
+group steps.
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-moe-1b-a400m \
-      --smoke --requests 8 --new-tokens 16
+      --smoke --requests 8 --batch 4 --groups 2 --new-tokens 16
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduce_for_smoke
-from repro.models.model import init_cache, init_params, prefill
-from repro.serving.batching import Request, ZigzagBatcher
-from repro.serving.engine import (
-    TriMoEServingEngine,
-    fill_tiers_from_params,
-    init_tiered_for_model,
-)
-from repro.serving.tiered_moe import TierSizes
+from repro.models.model import init_params
+from repro.serving.batching import Request
+from repro.serving.loop import ServingLoop
+
+
+def build_loop(cfg, *, batch: int, groups: int, cache_len: int,
+               cold_capacity_frac: float = 1.0, seed: int = 0) -> ServingLoop:
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    return ServingLoop(
+        cfg, params,
+        batch_size=batch, n_groups=groups, cache_len=cache_len,
+        cold_capacity_frac=cold_capacity_frac,
+    )
+
+
+def make_requests(cfg, n: int, prompt_len: int, new_tokens: int,
+                  stagger: int = 0, seed: int = 0):
+    """n requests; with `stagger`, prompt lengths cycle over the
+    inclusive range [prompt_len, prompt_len + stagger]."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for rid in range(n):
+        plen = prompt_len + (rid % (stagger + 1))
+        reqs.append(Request(
+            rid=rid,
+            prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+            max_new_tokens=new_tokens,
+        ))
+    return reqs
 
 
 def main(argv=None):
@@ -32,7 +54,9 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--groups", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--stagger", type=int, default=3)
     ap.add_argument("--new-tokens", type=int, default=16)
     args = ap.parse_args(argv)
 
@@ -41,67 +65,23 @@ def main(argv=None):
         cfg = reduce_for_smoke(cfg)
     assert cfg.moe is not None, "serve.py drives the TriMoE MoE path"
 
-    rng = jax.random.PRNGKey(0)
-    params = init_params(rng, cfg)
-    sizes = TierSizes(
-        max(1, cfg.moe.n_experts // 4),
-        max(1, int(0.3 * cfg.moe.n_experts)),
-        cfg.moe.n_experts - max(1, cfg.moe.n_experts // 4)
-        - max(1, int(0.3 * cfg.moe.n_experts)),
-    )
-    tiered = init_tiered_for_model(jax.random.PRNGKey(1), cfg, sizes)
-    tiered = fill_tiers_from_params(params, tiered, cfg)
+    cache_len = args.prompt_len + args.stagger + args.new_tokens
+    loop = build_loop(cfg, batch=args.batch, groups=args.groups,
+                      cache_len=cache_len)
+    for r in make_requests(cfg, args.requests, args.prompt_len,
+                           args.new_tokens, stagger=args.stagger):
+        loop.submit(r)
 
-    cache_len = args.prompt_len + args.new_tokens
-    # example scale: one zigzag group (continuous batching) — all slots
-    # share the decode position; multi-group interleave is exercised by
-    # the batching unit tests
-    batcher = ZigzagBatcher(args.batch, n_groups=1)
-    rng_np = np.random.default_rng(0)
-    for rid in range(args.requests):
-        batcher.submit(Request(
-            rid=rid,
-            prompt=rng_np.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
-            max_new_tokens=args.new_tokens,
-        ))
-
-    # prefill the whole fixed batch at once (example-scale simplification:
-    # all prompts same length); engine then decodes zigzag groups
-    prompts = np.stack([r.prompt for r in batcher.queue[: args.batch]])
-    for r in batcher.queue[: args.batch]:
-        pass
-    batch = {"tokens": jnp.asarray(prompts)}
-    _, cache = prefill(params, cfg, batch, cache_len=cache_len)
-    # assign prefilled requests to slots
-    for i in range(args.batch):
-        batcher.slots[i].request = batcher.queue.pop(0)
-        batcher.slots[i].pos = args.prompt_len
-
-    engine = TriMoEServingEngine(cfg, params, cache, tiered, sizes=sizes)
-
-    t0 = time.time()
-    generated = 0
-    pos = args.prompt_len
-    while any(s.request and not s.request.done for s in batcher.slots) and pos < cache_len:
-        nb = batcher.next_batch()
-        if nb is None:
-            continue
-        live, toks = nb
-        # example-scale: decode the full batch; record only live slots
-        full = np.zeros((args.batch, 1), np.int32)
-        for i, t in zip(live, toks):
-            full[i] = t
-        logits = engine.step(jnp.asarray(full), pos)
-        nxt = np.asarray(jnp.argmax(logits, -1))
-        batcher.record(live, nxt[live])
-        generated += len(live)
-        pos += 1
-    dt = time.time() - t0
-    print(f"[serve] generated {generated} tokens in {dt:.2f}s "
-          f"({generated / max(dt, 1e-9):.1f} tok/s at example scale)")
-    print(f"[serve] migrations={engine.stats.migrations} plans={engine.stats.plans} "
-          f"predictor_acc={engine.predictor.stats.accuracy:.2f}")
-    return generated
+    done = loop.run()
+    eng = loop.engine
+    print(f"[serve] {loop.stats.summary()}")
+    print(f"[serve] migrations={eng.stats.migrations} plans={eng.stats.plans} "
+          f"prefills={eng.stats.prefills} "
+          f"predictor_acc={eng.predictor.stats.accuracy:.2f}")
+    for r in done[: min(4, len(done))]:
+        print(f"[serve]   rid={r.rid} prompt_len={r.prompt_len} "
+              f"tokens={r.generated[:8]}{'...' if len(r.generated) > 8 else ''}")
+    return loop.stats.generated_tokens
 
 
 if __name__ == "__main__":

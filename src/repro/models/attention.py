@@ -112,11 +112,15 @@ def _grouped_attention(
             base = q_offset if q_offset is not None else (sk - sq)
             qpos = start + jnp.arange(qc.shape[1]) + base
             mask = kpos[None, :] <= qpos[:, None]  # [C, Sk]
+        if mask is not None:
+            mask = mask[None]  # [1, C, Sk]
         if valid is not None:
-            vmask = valid[None, :]
+            # valid: [Sk] shared, or [B, Sk] per-row (continuous batching:
+            # slots in one decode group sit at different absolute positions)
+            vmask = valid[None, None, :] if valid.ndim == 1 else valid[:, None, :]
             mask = vmask if mask is None else (mask & vmask)
         if mask is not None:
-            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1)
         return jnp.einsum("bckgs,bskd->bckgd", p.astype(v.dtype), v)
 
@@ -196,12 +200,16 @@ def gqa_forward(p: Params, cfg, x, positions, *, kv_override=None, causal=True):
 def gqa_decode(p: Params, cfg, x, cache_k, cache_v, pos):
     """One-token decode against a ring-buffer cache.
 
-    x: [B, 1, D]; cache_k/v: [B, S, Kv, hd]; pos: scalar int32 — the
-    absolute position of the new token. The oldest entry (slot pos % S)
-    is overwritten first, then attention runs over the full window.
+    x: [B, 1, D]; cache_k/v: [B, S, Kv, hd]; pos: int32 scalar or [B] —
+    the absolute position of each row's new token (per-row positions are
+    the continuous-batching case: slots hold requests with staggered
+    prompt lengths). The oldest entry (slot pos % S) is overwritten
+    first, then attention runs over the full window.
     """
+    b = x.shape[0]
     s_max = cache_k.shape[1]
-    posv = jnp.full((x.shape[0], 1), pos, dtype=jnp.int32)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    posv = pos[:, None]
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
     v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
@@ -210,10 +218,11 @@ def gqa_decode(p: Params, cfg, x, cache_k, cache_v, pos):
     q = apply_rope(q, posv, cfg.rope_theta)
     k = apply_rope(k, posv, cfg.rope_theta)
     slot = jnp.mod(pos, s_max)
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
+    rows = jnp.arange(b)
+    cache_k = cache_k.at[rows, slot].set(k[:, 0])
+    cache_v = cache_v.at[rows, slot].set(v[:, 0])
     # slot-validity mask: before the ring wraps, tail slots are empty
-    valid = jnp.arange(s_max) <= pos
+    valid = jnp.arange(s_max)[None, :] <= posv
     out = _grouped_attention(q, cache_k, cache_v, valid=valid)
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache_k, cache_v
 
@@ -268,12 +277,14 @@ def mla_forward(p: Params, cfg, x, positions):
 def mla_decode(p: Params, cfg, x, cache_ckv, cache_krope, pos):
     """Absorbed MLA decode: score/value against the latent cache directly.
 
-    cache_ckv: [B, S, r]; cache_krope: [B, S, rope_dim].
+    cache_ckv: [B, S, r]; cache_krope: [B, S, rope_dim]; pos: int32
+    scalar or [B] per-row absolute positions (continuous batching).
     """
     m = cfg.mla
     s_max = cache_ckv.shape[1]
     b = x.shape[0]
-    posv = jnp.full((b, 1), pos, dtype=jnp.int32)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    posv = pos[:, None]
 
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])  # [B,1,H,nope+rope]
     q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
@@ -283,10 +294,9 @@ def mla_decode(p: Params, cfg, x, cache_ckv, cache_krope, pos):
     ckv_new, krope_new = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
     krope_new = apply_rope(krope_new[:, :, None, :], posv, cfg.rope_theta)[:, :, 0, :]
     slot = jnp.mod(pos, s_max)
-    cache_ckv = jax.lax.dynamic_update_slice_in_dim(cache_ckv, ckv_new, slot, axis=1)
-    cache_krope = jax.lax.dynamic_update_slice_in_dim(
-        cache_krope, krope_new, slot, axis=1
-    )
+    rows = jnp.arange(b)
+    cache_ckv = cache_ckv.at[rows, slot].set(ckv_new[:, 0])
+    cache_krope = cache_krope.at[rows, slot].set(krope_new[:, 0])
 
     wk_b, wv_b = jnp.split(p["wkv_b"], [m.qk_nope_head_dim], axis=-1)
     # absorb W_k^nope into q: [B,1,H,r]
@@ -296,8 +306,8 @@ def mla_decode(p: Params, cfg, x, cache_ckv, cache_krope, pos):
         jnp.einsum("bshr,btr->bhst", q_lat, cache_ckv)
         + jnp.einsum("bshk,btk->bhst", q_rope, cache_krope)
     ).astype(jnp.float32) * scale
-    valid = (jnp.arange(s_max) <= pos)[None, None, None, :]
-    s = jnp.where(valid, s, NEG_INF)
+    valid = jnp.arange(s_max)[None, :] <= posv  # [B, S]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     pattn = jax.nn.softmax(s, axis=-1).astype(x.dtype)
     o_lat = jnp.einsum("bhst,btr->bshr", pattn, cache_ckv)  # [B,1,H,r]
     o = jnp.einsum("bshr,rhk->bshk", o_lat, wv_b)  # [B,1,H,v]

@@ -204,6 +204,8 @@ def apply_layer(
     pos=None,
     causal: bool = True,
     tiered_state: Params | None = None,
+    cold_capacity_frac: float = 0.25,
+    token_mask: jnp.ndarray | None = None,  # [B, S] valid-token mask (MoE counts)
 ):
     """Returns (x, aux_loss, expert_counts, new_cache).
 
@@ -286,7 +288,11 @@ def apply_layer(
             if tiered_state is not None:
                 from repro.serving.tiered_moe import tiered_moe_forward
 
-                y_moe, counts = tiered_moe_forward(p["ffn"], tiered_state, cfg, h2)
+                y_moe, counts = tiered_moe_forward(
+                    p["ffn"], tiered_state, cfg, h2,
+                    cold_capacity_frac=cold_capacity_frac,
+                    token_mask=token_mask,
+                )
                 x = x + y_moe
             else:
                 out = moe_lib.moe_forward(
@@ -383,13 +389,25 @@ def forward_train(
     return logits, aux_total, counts.reshape(-1, counts.shape[-1])
 
 
-def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, Any], cache_len: int | None = None):
+def prefill(
+    params: Params,
+    cfg: ModelConfig,
+    batch: Dict[str, Any],
+    cache_len: int | None = None,
+    tiered: Params | None = None,
+    cold_capacity_frac: float = 0.25,
+):
     """Full-sequence prefill building the decode cache.
 
     Returns (last_token_logits [B,V], cache). Attention layers cache
     K/V (plus cross K/V for enc-dec); recurrent mixers (mamba/xlstm)
     cache their final sequence state, so decode continues exactly where
     the parallel form left off (validated in tests/test_models.py).
+
+    `tiered` optionally carries TriMoE tier states (same pytree as
+    decode_step's): serving engines hold stripped params (expert weights
+    live only in tier buffers), so their prefill must route MoE layers
+    through the tiered runtime too.
     """
     tokens = batch["tokens"]
     b, s = tokens.shape
@@ -420,21 +438,32 @@ def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, Any], cache_len: 
         c = init_layer_cache(cfg, sig, b, cache_len, cross)
         if enc_out is not None:
             c["ck"], c["cv"] = _cross_kv(cfg, p, enc_out)
-        x, _, _, nc = apply_layer(cfg, sig, p, x, positions, mode="full", cache=c)
+        ts = tiered.get(f"layer{li}") if tiered else None
+        x, _, _, nc = apply_layer(
+            cfg, sig, p, x, positions, mode="full", cache=c,
+            tiered_state=ts, cold_capacity_frac=cold_capacity_frac,
+        )
         cache_out[f"layer{li}"] = merge(c, nc)
 
-    def body(x, p):
+    tiered_stack = tiered.get("stack") if tiered else None
+
+    def body(x, inp):
+        p, ts_stack = inp
         new_caches = {}
         for j, sig in enumerate(period):
             lp = p[f"slot{j}"]
             c = init_layer_cache(cfg, sig, b, cache_len, cross)
             if enc_out is not None:
                 c["ck"], c["cv"] = _cross_kv(cfg, lp, enc_out)
-            x, _, _, nc = apply_layer(cfg, sig, lp, x, positions, mode="full", cache=c)
+            ts = ts_stack.get(f"slot{j}") if ts_stack else None
+            x, _, _, nc = apply_layer(
+                cfg, sig, lp, x, positions, mode="full", cache=c,
+                tiered_state=ts, cold_capacity_frac=cold_capacity_frac,
+            )
             new_caches[f"slot{j}"] = merge(c, nc)
         return x, new_caches
 
-    x, stack_cache = jax.lax.scan(body, x, params["stack"])
+    x, stack_cache = jax.lax.scan(body, x, (params["stack"], tiered_stack or {}))
     cache_out["stack"] = stack_cache
     logits = _logits(params, cfg, x[:, -1:, :])[:, 0]
     return logits, cache_out
@@ -447,15 +476,22 @@ def decode_step(
     cache: Params,
     pos,
     tiered: Params | None = None,
+    cold_capacity_frac: float = 0.25,
+    token_mask: jnp.ndarray | None = None,
 ):
-    """One decode step. tokens: [B,1] int32; pos: scalar int32 absolute
-    position (cache is a full ring buffer of the shape-spec seq_len).
-    `tiered` optionally carries per-layer TriMoE tier states (stacked the
-    same way as params["stack"], keyed by MoE slots only).
+    """One decode step. tokens: [B,1] int32; pos: int32 absolute position
+    — scalar (all rows aligned) or [B] per-row (continuous batching with
+    staggered prompt lengths); the cache is a full ring buffer of the
+    shape-spec seq_len. `tiered` optionally carries per-layer TriMoE tier
+    states (stacked the same way as params["stack"], keyed by MoE slots
+    only). `token_mask` [B] marks live rows: dead (padded) slots are
+    excluded from MoE dispatch and expert counts.
     Returns (logits [B,V], new_cache, expert_counts)."""
     unrolled_idx, n_groups, period = stack_plan(cfg)
     x = embed(params["embed"], tokens)
-    positions = jnp.full((tokens.shape[0], 1), pos, jnp.int32)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (tokens.shape[0],))
+    positions = pos[:, None]
+    tmask = None if token_mask is None else token_mask.reshape(-1, 1)
 
     counts_all = []
     for li in unrolled_idx:
@@ -464,6 +500,7 @@ def decode_step(
         x, _, counts, nc = apply_layer(
             cfg, sig, params[f"layer{li}"], x, positions,
             mode="decode", cache=cache[f"layer{li}"], pos=pos, tiered_state=ts,
+            cold_capacity_frac=cold_capacity_frac, token_mask=tmask,
         )
         cache = {**cache, f"layer{li}": {**cache[f"layer{li}"], **nc}}
         counts_all.append(counts)
@@ -480,6 +517,7 @@ def decode_step(
             x, _, counts, nc = apply_layer(
                 cfg, sig, p[f"slot{j}"], x, positions,
                 mode="decode", cache=c[f"slot{j}"], pos=pos, tiered_state=ts,
+                cold_capacity_frac=cold_capacity_frac, token_mask=tmask,
             )
             merged = dict(c[f"slot{j}"])
             merged.update(nc)

@@ -5,7 +5,15 @@ from repro.serving.engine import (
     init_tiered_for_model,
     strip_expert_weights,
 )
-from repro.serving.kv_cache import cache_bytes, cache_spec, reset_slots
+from repro.serving.kv_cache import (
+    SlotKVCache,
+    cache_bytes,
+    cache_spec,
+    gather_slots,
+    reset_slots,
+    scatter_slots,
+)
+from repro.serving.loop import LoopStats, ServingLoop
 from repro.serving.tiered_moe import (
     TierSizes,
     apply_migrations,
@@ -17,6 +25,7 @@ from repro.serving.tiered_moe import (
 __all__ = [
     "Request", "ZigzagBatcher", "TriMoEServingEngine",
     "fill_tiers_from_params", "init_tiered_for_model", "strip_expert_weights",
-    "cache_bytes", "cache_spec", "reset_slots", "TierSizes",
+    "SlotKVCache", "cache_bytes", "cache_spec", "gather_slots", "reset_slots",
+    "scatter_slots", "LoopStats", "ServingLoop", "TierSizes",
     "apply_migrations", "init_tiered_state", "tier_sizes", "tiered_moe_forward",
 ]

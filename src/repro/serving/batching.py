@@ -10,7 +10,7 @@ allocation into a fixed decode batch, and zigzag group rotation.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -25,6 +25,10 @@ class Request:
     @property
     def done(self) -> bool:
         return len(self.generated) >= self.max_new_tokens
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
 
 
 @dataclass
@@ -53,18 +57,70 @@ class ZigzagBatcher:
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
+    def admit(self) -> Tuple[List[int], List[int]]:
+        """Recycle done slots and admit queued requests into free slots.
+
+        Returns (freed, filled) slot-index lists: `freed` are slots whose
+        request just completed (their cache rows must be evicted before
+        reuse); `filled` are slots newly holding an admitted request,
+        which needs a prefill before it can join decode. A slot can
+        appear in both lists (recycled and immediately refilled).
+        """
+        freed = self.recycle()
+        filled: List[int] = []
+        for i, s in enumerate(self.slots):
+            if s.request is None and self.queue:
+                s.request = self.queue.pop(0)
+                s.pos = len(s.request.prompt)
+                filled.append(i)
+        return freed, filled
+
+    def recycle(self) -> List[int]:
+        """Move done requests to `completed`, freeing their slots."""
+        freed: List[int] = []
+        for i, s in enumerate(self.slots):
+            if s.request is not None and s.request.done:
+                self.completed.append(s.request)
+                s.request = None
+                freed.append(i)
+        return freed
+
     def _fill_slots(self) -> None:
-        for s in self.slots:
-            if s.request is None or s.request.done:
-                if s.request is not None and s.request.done:
-                    self.completed.append(s.request)
-                    s.request = None
-                if self.queue:
-                    s.request = self.queue.pop(0)
-                    s.pos = len(s.request.prompt)
+        self.admit()
 
     def active_group(self) -> int:
         return self.step_idx % self.n_groups
+
+    def group_slots(self, g: int) -> List[int]:
+        """Slot indices owned by zigzag group g (fixed width)."""
+        width = self.batch_size // self.n_groups
+        return list(range(g * width, (g + 1) * width))
+
+    def next_group(self):
+        """Fixed-width view of the active zigzag group for shape-stable
+        stepping: (group, slot_indices, tokens [W,1], pos [W], live [W]).
+
+        Unlike next_batch, dead slots stay in the batch (tokens/pos 0,
+        live False) so the jitted decode step compiles once per group
+        width; callers mask with `live` when recording. Advances the
+        rotation; returns None when the whole group is idle.
+        """
+        g = self.active_group()
+        idxs = self.group_slots(g)
+        self.step_idx += 1
+        toks = np.zeros((len(idxs), 1), np.int32)
+        pos = np.zeros((len(idxs),), np.int32)
+        live = np.zeros((len(idxs),), bool)
+        for row, i in enumerate(idxs):
+            r = self.slots[i].request
+            if r is None or r.done:
+                continue
+            toks[row, 0] = r.generated[-1] if r.generated else int(r.prompt[-1])
+            pos[row] = self.slots[i].pos
+            live[row] = True
+        if not live.any():
+            return None
+        return g, idxs, toks, pos, live
 
     def next_batch(self):
         """Returns (slot_indices, tokens [G, 1]) for the active zigzag

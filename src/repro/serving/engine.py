@@ -25,7 +25,8 @@ from repro.core.cost_model import ExpertShape, TPUDomains
 from repro.core.predictor import EMALoadPredictor
 from repro.core.tiers import COLD, HOT, WARM, TierThresholds
 from repro.models.layers import Params
-from repro.models.model import decode_step, layer_signature, stack_plan
+from repro.models.model import decode_step, layer_signature, prefill, stack_plan
+from repro.serving.kv_cache import SlotKVCache, gather_slots, scatter_slots
 from repro.serving.tiered_moe import (
     TierSizes,
     apply_migrations,
@@ -124,41 +125,84 @@ def strip_expert_weights(params: Params, cfg: ModelConfig) -> Params:
 @dataclasses.dataclass
 class EngineStats:
     steps: int = 0
+    prefills: int = 0
+    prefill_tokens: int = 0
     migrations: int = 0
     plans: int = 0
 
 
 class TriMoEServingEngine:
-    """Host-side online loop at smoke/example scale (single device)."""
+    """Host-side online loop at smoke/example scale (single device).
+
+    `cache` may be a raw cache pytree (legacy full-batch stepping) or a
+    SlotKVCache (continuous batching: the ServingLoop admits requests
+    into slots, and decode gathers/scatters only the active zigzag
+    group's rows). `cold_capacity_frac=1.0` keeps the tiered runtime
+    exactly dropless so batched serving is token-for-token identical to
+    single-request generation; lower it to trade exactness for dispatch
+    buffer size (paper §Perf).
+    """
 
     def __init__(
         self,
         cfg: ModelConfig,
         params: Params,
-        cache: Params,
+        cache,
         tiered: Params,
         sizes: Optional[TierSizes] = None,
         plan_size: int = 4,  # paper §5.5: up to four experts per window
         thresholds: TierThresholds = TierThresholds(),
+        cold_capacity_frac: float = 1.0,
     ):
         assert cfg.moe is not None, "TriMoE engine requires a routed-MoE arch"
         self.cfg = cfg
         self.params = strip_expert_weights(params, cfg)
-        self.cache = cache
+        self.kv = cache if isinstance(cache, SlotKVCache) else SlotKVCache.from_cache(cache)
         self.tiered = tiered
         self.sizes = sizes or tier_sizes(cfg)
         self.plan_size = plan_size
         self.th = thresholds
+        self.cold_capacity_frac = cold_capacity_frac
         n_moe = sum(cfg.uses_moe_layer(i) for i in range(cfg.n_layers))
         self.predictor = EMALoadPredictor(n_moe, cfg.moe.n_experts, thresholds=thresholds)
         self.domains = TPUDomains()
         self.shape = ExpertShape(cfg.d_model, cfg.moe.d_expert)
         self.stats = EngineStats()
         self._step = jax.jit(
-            lambda p, t, c, pos, ts: decode_step(p, cfg, t, c, pos, tiered=ts)
+            lambda p, t, c, pos, ts: decode_step(
+                p, cfg, t, c, pos, tiered=ts,
+                cold_capacity_frac=cold_capacity_frac,
+            )
+        )
+
+        def step_slots(p, t, c, idx, pos, ts, live):
+            sub = gather_slots(c, idx)
+            logits, sub, counts = decode_step(
+                p, cfg, t, sub, pos, tiered=ts,
+                cold_capacity_frac=cold_capacity_frac, token_mask=live,
+            )
+            return logits, scatter_slots(c, sub, idx), counts
+
+        self._step_slots = jax.jit(step_slots)
+        self._prefill = jax.jit(
+            lambda p, toks, ts, cache_len: prefill(
+                p, cfg, {"tokens": toks}, cache_len=cache_len, tiered=ts,
+                cold_capacity_frac=cold_capacity_frac,
+            ),
+            static_argnums=(3,),
         )
         self._migrate = jax.jit(apply_migrations)
         self._layer_keys = self._flatten_layer_keys()
+
+    # cache is owned by the SlotKVCache so the loop and engine share one
+    # source of truth; keep attribute-style access for legacy callers.
+    @property
+    def cache(self):
+        return self.kv.cache
+
+    @cache.setter
+    def cache(self, value):
+        self.kv.cache = value
 
     def _flatten_layer_keys(self) -> List[tuple]:
         """Ordered (kind, name, group) keys, one per MoE layer."""
@@ -177,16 +221,61 @@ class TriMoEServingEngine:
 
     # ----------------------------------------------------------- stepping
     def step(self, tokens: jnp.ndarray, pos: int):
+        """Full-batch decode step + synchronous replan (legacy path)."""
         logits, self.cache, counts = self._step(
-            self.params, tokens, self.cache, jnp.int32(pos), self.tiered
+            self.params, tokens, self.cache, jnp.asarray(pos, jnp.int32), self.tiered
         )
         counts = np.asarray(counts)
         self.stats.steps += 1
-        self._replan(counts)
+        self.replan(counts)
+        return logits
+
+    def step_slots(self, tokens, pos, slot_indices, live=None):
+        """Decode only the cache rows in `slot_indices` (the active
+        zigzag group): gather rows -> decode -> scatter back, all inside
+        one jit so the compile is reused across groups.
+
+        tokens: [W,1] int32; pos: [W] per-slot absolute positions;
+        live: optional [W] bool — dead (padded) rows are excluded from
+        MoE dispatch and expert counts so the predictor only sees real
+        loads. Returns (logits [W,V], expert_counts) WITHOUT replanning
+        — the serving loop replans from the previous group's counts
+        while this group's step is in flight (zigzag overlap), via
+        `replan`.
+        """
+        idx = jnp.asarray(slot_indices, jnp.int32)
+        if live is None:
+            live = jnp.ones((idx.shape[0],), bool)
+        logits, self.kv.cache, counts = self._step_slots(
+            self.params, jnp.asarray(tokens), self.kv.cache, idx,
+            jnp.asarray(pos, jnp.int32), self.tiered, jnp.asarray(live, bool),
+        )
+        self.stats.steps += 1
+        return logits, counts
+
+    def prefill_slots(self, prompts, slot_indices):
+        """Prefill newly admitted requests into their cache slots.
+
+        prompts: [W, S] int32 (equal lengths — the loop admits per
+        request, so W is usually 1); runs the full-sequence forward
+        through the tiered MoE runtime (engine params are stripped) and
+        scatters the resulting rows into the slot cache. Returns the
+        last-token logits [W, V] — the first generated token.
+        """
+        assert self.kv.seq_len is not None, (
+            "prefill_slots needs a SlotKVCache built with an explicit seq_len"
+        )
+        prompts = jnp.asarray(prompts, jnp.int32)
+        logits, sub_cache = self._prefill(
+            self.params, prompts, self.tiered, self.kv.seq_len
+        )
+        self.kv.scatter(sub_cache, slot_indices)
+        self.stats.prefills += prompts.shape[0]
+        self.stats.prefill_tokens += int(prompts.shape[0] * prompts.shape[1])
         return logits
 
     # ---------------------------------------------------------- migration
-    def _replan(self, counts: np.ndarray) -> None:
+    def replan(self, counts: np.ndarray) -> None:
         """Update predictor, emit migration plans per MoE layer."""
         for li, key in enumerate(self._layer_keys):
             self.predictor.update(li, counts[li])
@@ -233,3 +322,5 @@ class TriMoEServingEngine:
                     lambda a, n: a.at[g].set(n), self.tiered["stack"][name], new_state
                 )
             self.stats.plans += 1
+
+    _replan = replan  # legacy name

@@ -1,0 +1,230 @@
+"""Continuous-batching TriMoE serving loop (paper §2.2, §4).
+
+The paper's throughput claim rests on amortizing expert-weight movement
+over large, continuously refilled decode batches: offline/continuous
+batching keeps every decode slot busy, and zigzag batching interleaves
+micro-batch groups so the expert relayout for one group overlaps the
+other group's step. This module is the orchestration layer above the
+engine:
+
+  ServingLoop
+    ├─ ZigzagBatcher   — request queue, slot allocation, group rotation
+    ├─ SlotKVCache     — slot-managed ring-buffer cache rows
+    └─ TriMoEServingEngine — jitted tiered decode / prefill / migration
+
+Per iteration: (1) recycle finished slots (evicting their cache rows)
+and admit queued requests — each admission runs a prefill that writes
+the prompt's cache rows in place and samples the first token from the
+prefill logits; (2) decode the active zigzag group at its per-slot
+positions (fixed group width — dead slots are masked, so the decode
+step compiles once); (3) while that step is in flight on the device,
+the host replans expert migrations from the PREVIOUS group's realized
+loads — the zigzag overlap of migration and compute; (4) record
+sampled tokens and rotate to the next group.
+
+Decoding is greedy and, with the engine default cold_capacity_frac=1.0,
+token-for-token identical to single-request generation (verified in
+tests/test_serving_loop.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.tiers import TierThresholds
+from repro.models.layers import Params
+from repro.serving.batching import Request, ZigzagBatcher
+from repro.serving.engine import (
+    TriMoEServingEngine,
+    fill_tiers_from_params,
+    init_tiered_for_model,
+)
+from repro.serving.kv_cache import SlotKVCache
+from repro.serving.tiered_moe import TierSizes
+
+
+@dataclasses.dataclass
+class LoopStats:
+    admitted: int = 0
+    completed: int = 0
+    decode_steps: int = 0  # group steps that ran the engine
+    idle_steps: int = 0  # group rotations that found the group empty
+    generated_tokens: int = 0  # sampled tokens (prefill firsts + decode)
+    wall_s: float = 0.0
+    util_sum: float = 0.0
+    util_samples: int = 0
+    latencies_s: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.generated_tokens / max(self.wall_s, 1e-9)
+
+    @property
+    def mean_utilization(self) -> float:
+        return self.util_sum / max(self.util_samples, 1)
+
+    @property
+    def mean_latency_s(self) -> float:
+        return float(np.mean(self.latencies_s)) if self.latencies_s else 0.0
+
+    def summary(self) -> str:
+        return (
+            f"{self.completed}/{self.admitted} requests, "
+            f"{self.generated_tokens} tokens in {self.wall_s:.2f}s "
+            f"({self.tokens_per_s:.1f} tok/s), "
+            f"util={self.mean_utilization:.2f}, "
+            f"mean_latency={self.mean_latency_s * 1e3:.0f}ms, "
+            f"decode_steps={self.decode_steps} idle_steps={self.idle_steps}"
+        )
+
+
+class ServingLoop:
+    """Multi-request continuous-batching loop over the TriMoE engine.
+
+    batch_size decode slots are split into n_groups zigzag groups; the
+    cache holds batch_size rows of length cache_len (each admitted
+    request needs prompt_len + max_new_tokens - 1 <= cache_len to avoid
+    ring wrap-around).
+
+    Known example-scale limitation: admission prefills per request at
+    the prompt's exact length, so each DISTINCT prompt length jit-
+    compiles the prefill once. Length bucketing (pad to a few bucket
+    widths + per-row logit gather) would bound compiles, but needs
+    masked recurrent-state prefill to stay correct for mamba/xlstm
+    mixers — tracked in ROADMAP.md.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Params,
+        tiered: Optional[Params] = None,
+        *,
+        batch_size: int = 8,
+        n_groups: int = 1,
+        cache_len: int = 64,
+        sizes: Optional[TierSizes] = None,
+        plan_size: int = 4,
+        thresholds: TierThresholds = TierThresholds(),
+        cold_capacity_frac: float = 1.0,
+        rng_seed: int = 1,
+    ):
+        assert cfg.moe is not None, "ServingLoop drives the TriMoE MoE path"
+        if tiered is None:
+            import jax
+
+            sizes = sizes or _default_sizes(cfg)
+            tiered = init_tiered_for_model(jax.random.PRNGKey(rng_seed), cfg, sizes)
+            tiered = fill_tiers_from_params(params, tiered, cfg)
+        self.cfg = cfg
+        self.batcher = ZigzagBatcher(batch_size, n_groups)
+        self.kv = SlotKVCache(cfg, batch_size, cache_len)
+        self.engine = TriMoEServingEngine(
+            cfg, params, self.kv, tiered, sizes=sizes, plan_size=plan_size,
+            thresholds=thresholds, cold_capacity_frac=cold_capacity_frac,
+        )
+        self.stats = LoopStats()
+        self.completions: List[Request] = []
+        self._t_admit: Dict[int, float] = {}
+        self._pending_counts = None  # previous group's realized loads
+
+    # ------------------------------------------------------------ intake
+    def submit(self, req: Request) -> None:
+        assert req.prompt_len + req.max_new_tokens - 1 <= self.kv.seq_len, (
+            f"request {req.rid}: {req.prompt_len}+{req.max_new_tokens} tokens "
+            f"overflow the cache ring (cache_len={self.kv.seq_len})"
+        )
+        self.batcher.submit(req)
+
+    def _admit(self) -> None:
+        freed, filled = self.batcher.admit()
+        self._drain_completed()
+        if freed:
+            self.kv.free(freed)  # evict: zero the recycled cache rows
+        for i in filled:
+            self.kv.claim(i)
+            r = self.batcher.slots[i].request
+            self._t_admit[r.rid] = time.time()
+            self.stats.admitted += 1
+            # prefill writes the slot's cache rows in place; its logits
+            # sample the first generated token (no wasted re-decode of
+            # the last prompt token). Prompt-token accounting lives in
+            # engine.stats.prefill_tokens.
+            logits = self.engine.prefill_slots(r.prompt[None, :], [i])
+            t0 = int(np.asarray(jnp.argmax(logits[0], -1)))
+            r.generated.append(t0)
+            self.stats.generated_tokens += 1
+
+    def _drain_completed(self) -> None:
+        while len(self.completions) < len(self.batcher.completed):
+            r = self.batcher.completed[len(self.completions)]
+            self.completions.append(r)
+            self.stats.completed += 1
+            t0 = self._t_admit.get(r.rid)
+            if t0 is not None:
+                self.stats.latencies_s.append(time.time() - t0)
+
+    # ------------------------------------------------------------- drive
+    def _work_remaining(self) -> bool:
+        if self.batcher.queue:
+            return True
+        return any(
+            s.request is not None and not s.request.done for s in self.batcher.slots
+        )
+
+    def _flush_replan(self) -> None:
+        if self._pending_counts is not None:
+            self.engine.replan(np.asarray(self._pending_counts))
+            self._pending_counts = None
+
+    def run(self, max_steps: Optional[int] = None) -> List[Request]:
+        """Drive until every submitted request completes (or max_steps
+        group rotations elapse). Returns the completed requests in
+        completion order; per-request tokens are in Request.generated."""
+        t_start = time.time()
+        steps = 0
+        while self._work_remaining():
+            if max_steps is not None and steps >= max_steps:
+                break
+            steps += 1
+            self._admit()
+            gb = self.batcher.next_group()
+            self.stats.util_sum += self.batcher.utilization
+            self.stats.util_samples += 1
+            if gb is None:
+                # the active group is idle — use its step slot for any
+                # outstanding migration work instead
+                self.stats.idle_steps += 1
+                self._flush_replan()
+                continue
+            _, idxs, toks, pos, live = gb
+            logits, counts = self.engine.step_slots(toks, pos, idxs, live=live)
+            # zigzag overlap: while this group's step runs on the device,
+            # the host replans migrations from the previous group's loads
+            self._flush_replan()
+            self._pending_counts = counts
+            nxt = np.asarray(jnp.argmax(logits, -1))
+            live_idx = [i for i, alive in zip(idxs, live) if alive]
+            self.batcher.record(live_idx, nxt[live])
+            self.stats.decode_steps += 1
+            self.stats.generated_tokens += len(live_idx)
+        self._flush_replan()
+        # recycle (but don't admit) the final wave of completions so the
+        # loop can be reused for further submissions
+        self.kv.free(self.batcher.recycle())
+        self._drain_completed()
+        self.stats.wall_s = time.time() - t_start
+        return self.completions
+
+
+def _default_sizes(cfg: ModelConfig) -> TierSizes:
+    """Example-scale tier split: ~25% hot, ~30% warm, rest cold."""
+    e = cfg.moe.n_experts
+    n_hot = max(1, e // 4)
+    n_warm = max(1, int(0.3 * e))
+    return TierSizes(n_hot, n_warm, e - n_hot - n_warm)

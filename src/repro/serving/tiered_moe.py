@@ -124,13 +124,18 @@ def tiered_moe_forward(
     cfg,
     x: jnp.ndarray,  # [B, S, D] (decode: S == 1)
     cold_capacity_frac: float = 0.25,
+    token_mask: jnp.ndarray | None = None,  # [B, S] or [B*S] bool
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Returns (y, expert_counts[E]).
 
     cold_capacity_frac (§Perf): cold experts are low-load by scheduling
     invariant (relayout re-stripes anything above tau_cold), so their
     dispatch buffers run at a fraction of the dropless capacity; 1.0
-    restores exact dropless behavior."""
+    restores exact dropless behavior.
+
+    token_mask: invalid tokens (dead batch slots padded into a fixed-
+    width zigzag group) are excluded from dispatch and from the expert
+    counts, so the load predictor never sees phantom routing."""
     mo = cfg.moe
     e, k = mo.n_experts, mo.top_k
     b, s, d = x.shape
@@ -143,6 +148,9 @@ def tiered_moe_forward(
     a_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
     a_exp = idx.reshape(-1).astype(jnp.int32)
     a_w = w.reshape(-1)
+    a_live = None
+    if token_mask is not None:
+        a_live = jnp.repeat(token_mask.reshape(t), k)
 
     a_tier = state["expert_tier"][a_exp]
     a_slot = state["expert_slot"][a_exp]
@@ -155,8 +163,11 @@ def tiered_moe_forward(
         cap = t if tid != COLD_T else max(
             mo.top_k, int(t * cold_capacity_frac + 0.999)
         )
+        in_tier = a_tier == tid
+        if a_live is not None:
+            in_tier = in_tier & a_live
         h, dst, ok = _dispatch_tier(
-            flat, a_tok, a_w, a_slot, a_tier == tid, n_slots, cap
+            flat, a_tok, a_w, a_slot, in_tier, n_slots, cap
         )
         o = _tier_ffn(state[key], h)
         obuf = jnp.concatenate(
@@ -168,7 +179,8 @@ def tiered_moe_forward(
     y = y.reshape(b, s, d)
     if mo.n_shared:
         y = y + shared_ffn(p["shared"], x)
-    counts = jnp.zeros((e,), jnp.int32).at[a_exp].add(1)
+    one = 1 if a_live is None else a_live.astype(jnp.int32)
+    counts = jnp.zeros((e,), jnp.int32).at[a_exp].add(one)
     return y, counts
 
 

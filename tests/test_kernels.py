@@ -16,6 +16,7 @@ def _rand(rng, shape, dtype, scale=0.1):
 
 
 # ----------------------------------------------------------------- moe_gemm
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("t,d,f,e", [(32, 128, 256, 3), (96, 256, 128, 8), (16, 128, 128, 1)])
 def test_moe_gemm_matches_oracle(dtype, t, d, f, e):
@@ -47,6 +48,7 @@ def test_moe_gemm_oracle_is_segment_matmul():
 
 
 # -------------------------------------------------------------- expert_gemv
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("e,c,d,f,bf", [(2, 4, 128, 512, 256), (4, 8, 128, 1024, 512), (1, 1, 256, 256, 256)])
 def test_expert_gemv_matches_oracle(dtype, e, c, d, f, bf):
@@ -64,6 +66,7 @@ def test_expert_gemv_matches_oracle(dtype, e, c, d, f, bf):
 
 
 # ---------------------------------------------------------- flash attention
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("causal", [True, False])
 @pytest.mark.parametrize("b,h,sq,sk,dh,bq,bk", [
@@ -85,6 +88,7 @@ def test_flash_attention_matches_oracle(dtype, causal, b, h, sq, sk, dh, bq, bk)
     )
 
 
+@pytest.mark.slow
 def test_flash_attention_matches_model_attention():
     """Kernel agrees with the model's chunked-attention implementation."""
     from repro.models.attention import _grouped_attention

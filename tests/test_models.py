@@ -34,6 +34,7 @@ def _batch(cfg, rng, b, s):
     return out
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ASSIGNED)
 def test_forward_train_shapes_and_finiteness(arch, rng):
     cfg = _smoke_cfg(arch)
@@ -48,6 +49,7 @@ def test_forward_train_shapes_and_finiteness(arch, rng):
         assert counts.shape[-1] == cfg.moe.n_experts
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ASSIGNED)
 def test_prefill_decode_matches_full_forward(arch, rng):
     """prefill(S) + decode(token S) == forward over S+1 tokens (dropless)."""
@@ -109,3 +111,40 @@ def test_decode_ring_buffer_wraparound(rng):
         logits, cache, _ = decode_step(params, cfg, tok, cache, jnp.int32(s + i))
         assert np.all(np.isfinite(np.asarray(logits, np.float32)))
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "deepseek-v2-236b"])
+def test_decode_vector_pos_matches_scalar(arch, rng):
+    """Per-row decode positions (continuous batching) must reproduce the
+    scalar-pos path row for row — GQA and absorbed-MLA caches. Fast-tier
+    guard for the staggered-prompt decode path (the full all-arch
+    prefill/decode sweep is @slow)."""
+    from repro.serving.kv_cache import scatter_slots
+
+    cfg = _smoke_cfg(arch, dropless=True)
+    params = init_params(rng, cfg)
+    cache_len = 12
+    lens = (5, 8)
+    rows = []
+    for plen in lens:
+        batch = _batch(cfg, jax.random.fold_in(rng, plen), 1, plen)
+        logits, cache = prefill(params, cfg, batch, cache_len=cache_len)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        rows.append((tok, cache, plen))
+
+    # batched decode at staggered per-row positions...
+    full = init_cache(cfg, 2, cache_len)
+    for i, (_, cache, _) in enumerate(rows):
+        full = scatter_slots(full, cache, [i])
+    toks = jnp.concatenate([t for t, _, _ in rows], axis=0)
+    pos = jnp.asarray(lens, jnp.int32)
+    batched_logits, _, _ = decode_step(params, cfg, toks, full, pos)
+
+    # ...must equal each row's scalar-pos single decode
+    for i, (tok, cache, plen) in enumerate(rows):
+        solo, _, _ = decode_step(params, cfg, tok, cache, jnp.int32(plen))
+        np.testing.assert_allclose(
+            np.asarray(batched_logits[i], np.float32),
+            np.asarray(solo[0], np.float32),
+            atol=2e-2, rtol=2e-2,
+        )

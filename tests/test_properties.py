@@ -1,5 +1,8 @@
 """Property-based tests (hypothesis) on system invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cost_model import CPU, GPU, LOCALIZED, NDP, STRIPED, CostModel, ExpertShape

@@ -99,3 +99,23 @@ def test_engine_online_loop_runs():
         assert np.all(np.isfinite(np.asarray(logits, np.float32)))
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     assert eng.stats.steps == new
+
+
+def test_token_mask_excludes_dead_tokens_from_counts(setup):
+    """Dead (padded) slots in a fixed-width zigzag group must not leak
+    phantom loads into the expert counts the predictor consumes."""
+    cfg, p, state, x = setup
+    mask = jnp.asarray([[True] * 4, [False] * 4])  # row 1 entirely dead
+    y, counts = tiered_moe_forward(
+        p, state, cfg, x, cold_capacity_frac=1.0, token_mask=mask
+    )
+    y_live, counts_live = tiered_moe_forward(
+        p, state, cfg, x[:1], cold_capacity_frac=1.0
+    )
+    # counts: exactly the live rows' routing, nothing from dead tokens
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(counts_live))
+    assert int(counts.sum()) == 4 * cfg.moe.top_k
+    # live rows' outputs are untouched by masking the dead row
+    np.testing.assert_allclose(
+        np.asarray(y[:1], np.float32), np.asarray(y_live, np.float32), atol=1e-2
+    )
