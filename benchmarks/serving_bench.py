@@ -1,18 +1,29 @@
 """Serving-loop throughput benchmark: tokens/sec vs batch width and
 zigzag group count (paper §2.2 — offloading throughput comes from large
-continuously refilled batches).
+continuously refilled batches), plus a mixed-length trace mode that
+gates the bucketed-prefill compile count.
 
-Each grid point builds a fresh ServingLoop on a smoke-scale MoE config,
-runs one untimed warmup pass (compilation), then times a full serve of
-the request set.
+Grid mode: each point builds a fresh ServingLoop on a smoke-scale MoE
+config, runs one untimed warmup pass (compilation), then times a full
+serve of the request set.
+
+Mixed mode (--mixed): serves a trace with many DISTINCT prompt lengths
+and reports tok/s plus distinct prefill jit compiles. With length
+bucketing (the loop default) the prefill must compile at most
+len(bucket_table) times — the mode exits nonzero otherwise, which is
+the CI compile-count gate. Total backend compiles (decode, migration,
+...) are also counted via the jax.monitoring compile hook.
 
   PYTHONPATH=src python benchmarks/serving_bench.py
   PYTHONPATH=src python benchmarks/serving_bench.py \
       --widths 1 4 8 --groups 1 2 --requests 16 --new-tokens 16
+  PYTHONPATH=src python benchmarks/serving_bench.py --mixed --smoke \
+      --json BENCH_serving.json
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 import jax
@@ -20,7 +31,46 @@ import jax
 from repro.configs import get_config, reduce_for_smoke
 from repro.launch.serve import make_requests
 from repro.models.model import init_params
+from repro.serving.batching import Request
 from repro.serving.loop import ServingLoop
+
+
+class CompileCounter:
+    """Counts XLA backend compiles via the jax.monitoring duration hook
+    (the '/jax/core/compile/backend_compile_duration' event fires once
+    per compilation). Listener registration is process-global and
+    permanent (jax exposes no unregister), so it installs once and the
+    context manager snapshots the running total."""
+
+    _installed = False
+    _total = 0
+
+    @classmethod
+    def _install(cls) -> bool:
+        if cls._installed:
+            return True
+        try:
+            from jax import monitoring
+
+            def _on_event(event, duration, **kwargs):
+                if event.endswith("backend_compile_duration"):
+                    cls._total += 1
+
+            monitoring.register_event_duration_secs_listener(_on_event)
+            cls._installed = True
+        except Exception:  # monitoring API moved/missing: count stays -1
+            pass
+        return cls._installed
+
+    def __enter__(self):
+        self.available = self._install()
+        self._start = CompileCounter._total
+        self.count = -1
+        return self
+
+    def __exit__(self, *exc):
+        self.count = CompileCounter._total - self._start if self.available else -1
+        return False
 
 
 def bench_point(cfg, params, *, width, groups, requests, prompt_len,
@@ -45,16 +95,88 @@ def bench_point(cfg, params, *, width, groups, requests, prompt_len,
     return serve()
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="granite-moe-1b-a400m")
-    ap.add_argument("--widths", type=int, nargs="+", default=[1, 8])
-    ap.add_argument("--groups", type=int, nargs="+", default=[1, 2])
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=8)
-    ap.add_argument("--new-tokens", type=int, default=12)
-    args = ap.parse_args(argv)
+# ------------------------------------------------------- mixed-length mode
+MIXED_LENGTHS = (3, 5, 7, 9, 12, 17, 21, 26)
 
+
+def mixed_lengths(n: int):
+    """n distinct prompt lengths (>= 6 distinct, per the compile gate's
+    acceptance criterion); extends past the base table in +5 steps."""
+    if n < 6:
+        print(f"[serving_bench] --mixed-lengths {n} raised to the gate "
+              f"minimum of 6")
+        n = 6
+    lengths = list(MIXED_LENGTHS[:n])
+    while len(lengths) < n:
+        lengths.append(lengths[-1] + 5)
+    return tuple(lengths)
+
+
+def run_mixed(args) -> int:
+    cfg = reduce_for_smoke(get_config(args.arch))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    import numpy as np
+
+    lengths = mixed_lengths(args.mixed_lengths)
+    new_tokens = args.new_tokens if not args.smoke else 6
+    n_requests = args.requests if not args.smoke else 2 * len(lengths)
+    cache_len = max(lengths) + new_tokens
+    loop = ServingLoop(cfg, params, batch_size=args.mixed_batch,
+                       n_groups=args.mixed_groups, cache_len=cache_len)
+    table = loop.bucket_table
+    rng = np.random.default_rng(11)
+    with CompileCounter() as cc:
+        for rid in range(n_requests):
+            plen = lengths[rid % len(lengths)]
+            loop.submit(Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+                max_new_tokens=new_tokens,
+            ))
+        done = loop.run()
+    st = loop.stats
+    compiles = loop.engine.prefill_compiles
+    print(f"[serving_bench] mixed trace: {len(done)}/{n_requests} requests, "
+          f"{len(set(lengths))} distinct prompt lengths, "
+          f"buckets={list(table.widths)}")
+    print(f"[serving_bench] {st.summary()}")
+    print(f"[serving_bench] prefill compiles: {compiles} "
+          f"(bucket-table bound: {len(table)}); "
+          f"total backend compiles: {cc.count}")
+
+    result = {
+        "mode": "mixed",
+        "arch": cfg.name,
+        "requests": n_requests,
+        "distinct_prompt_lengths": len(set(lengths)),
+        "prompt_lengths": list(lengths),
+        "new_tokens": new_tokens,
+        "batch": args.mixed_batch,
+        "groups": args.mixed_groups,
+        "bucket_table": list(table.widths),
+        "tokens_per_s": round(st.tokens_per_s, 1),
+        "mean_utilization": round(st.mean_utilization, 3),
+        "mean_latency_ms": round(st.mean_latency_s * 1e3, 1),
+        "prefill_compiles": compiles,
+        "backend_compiles": cc.count,
+    }
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"[serving_bench] wrote {args.json}")
+
+    if len(done) != n_requests:
+        print(f"[serving_bench] FAIL: only {len(done)}/{n_requests} completed")
+        return 1
+    if compiles > len(table):
+        print(f"[serving_bench] FAIL: {compiles} distinct prefill compiles "
+              f"exceed the bucket-table size {len(table)}")
+        return 1
+    return 0
+
+
+def run_grid(args) -> int:
     cfg = reduce_for_smoke(get_config(args.arch))
     params = init_params(jax.random.PRNGKey(0), cfg)
     cache_len = args.prompt_len + args.new_tokens
@@ -79,6 +201,22 @@ def main(argv=None):
                   f"{stats.mean_latency_s * 1e3:>8.0f} "
                   f"{stats.decode_steps:>6}")
 
+    if args.json:
+        result = {
+            "mode": "grid",
+            "arch": cfg.name,
+            "requests": args.requests,
+            "prompt_len": args.prompt_len,
+            "new_tokens": args.new_tokens,
+            "tokens_per_s": {
+                f"w{w}g{g}": round(v, 1) for (w, g), v in tps.items()
+            },
+        }
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"[serving_bench] wrote {args.json}")
+
     if (1, 1) in tps and (8, 1) in tps:
         speedup = tps[(8, 1)] / tps[(1, 1)]
         print(f"[serving_bench] batch width 8 vs 1: {speedup:.2f}x")
@@ -86,6 +224,34 @@ def main(argv=None):
             print("[serving_bench] FAIL: width 8 did not outperform width 1")
             return 1
     return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-moe-1b-a400m")
+    ap.add_argument("--widths", type=int, nargs="+", default=[1, 8])
+    ap.add_argument("--groups", type=int, nargs="+", default=[1, 2])
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--json", default=None,
+                    help="write results to this JSON file (BENCH_serving.json "
+                         "in CI, uploaded as an artifact)")
+    ap.add_argument("--mixed", action="store_true",
+                    help="mixed-length trace mode: >=6 distinct prompt "
+                         "lengths; fails if distinct prefill compiles exceed "
+                         "the bucket-table size (the CI compile gate)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fast-tier sizes for the mixed mode")
+    ap.add_argument("--mixed-lengths", type=int, default=8,
+                    help="number of distinct prompt lengths (>=6)")
+    ap.add_argument("--mixed-batch", type=int, default=8)
+    ap.add_argument("--mixed-groups", type=int, default=2)
+    args = ap.parse_args(argv)
+
+    if args.mixed:
+        return run_mixed(args)
+    return run_grid(args)
 
 
 if __name__ == "__main__":

@@ -23,12 +23,14 @@ from repro.serving.loop import ServingLoop
 
 
 def build_loop(cfg, *, batch: int, groups: int, cache_len: int,
-               cold_capacity_frac: float = 1.0, seed: int = 0) -> ServingLoop:
+               cold_capacity_frac: float = 1.0, seed: int = 0,
+               bucket_table="auto", max_admit_wait: int = 4) -> ServingLoop:
     params = init_params(jax.random.PRNGKey(seed), cfg)
     return ServingLoop(
         cfg, params,
         batch_size=batch, n_groups=groups, cache_len=cache_len,
         cold_capacity_frac=cold_capacity_frac,
+        bucket_table=bucket_table, max_admit_wait=max_admit_wait,
     )
 
 
@@ -58,6 +60,13 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--stagger", type=int, default=3)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--no-buckets", action="store_true",
+                    help="legacy exact-length prefill (one jit compile per "
+                         "distinct prompt length) instead of the default "
+                         "length-bucketed masked prefill")
+    ap.add_argument("--max-admit-wait", type=int, default=4,
+                    help="admit a partial same-bucket cohort after this many "
+                         "admission rounds (starvation cap)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -67,17 +76,22 @@ def main(argv=None):
 
     cache_len = args.prompt_len + args.stagger + args.new_tokens
     loop = build_loop(cfg, batch=args.batch, groups=args.groups,
-                      cache_len=cache_len)
+                      cache_len=cache_len,
+                      bucket_table=None if args.no_buckets else "auto",
+                      max_admit_wait=args.max_admit_wait)
     for r in make_requests(cfg, args.requests, args.prompt_len,
                            args.new_tokens, stagger=args.stagger):
         loop.submit(r)
 
     done = loop.run()
     eng = loop.engine
+    buckets = (list(loop.bucket_table.widths)
+               if loop.bucket_table is not None else "off")
     print(f"[serve] {loop.stats.summary()}")
     print(f"[serve] migrations={eng.stats.migrations} plans={eng.stats.plans} "
           f"prefills={eng.stats.prefills} "
           f"predictor_acc={eng.predictor.stats.accuracy:.2f}")
+    print(f"[serve] buckets={buckets} prefill_compiles={eng.prefill_compiles}")
     for r in done[: min(4, len(done))]:
         print(f"[serve]   rid={r.rid} prompt_len={r.prompt_len} "
               f"tokens={r.generated[:8]}{'...' if len(r.generated) > 8 else ''}")

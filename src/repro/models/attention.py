@@ -176,8 +176,13 @@ def _seq_parallel_attention(q, k, v, *, q_chunk: int):
 
 
 # ------------------------------------------------------------------- GQA
-def gqa_forward(p: Params, cfg, x, positions, *, kv_override=None, causal=True):
+def gqa_forward(p: Params, cfg, x, positions, *, kv_override=None, causal=True,
+                token_mask=None):
     """Full-sequence attention (train / prefill / encoder / cross).
+
+    `token_mask` [B, S] bool marks real tokens (bucketed masked prefill):
+    pad positions are excluded as KEYS, so real queries never attend to
+    padding; outputs at pad query positions are unspecified.
 
     Returns (out, (k, v)) — k/v in [B, S, Kv, hd] layout for caching.
     """
@@ -193,7 +198,7 @@ def gqa_forward(p: Params, cfg, x, positions, *, kv_override=None, causal=True):
         k, v = kv_override
         if "bq" in p:
             q = q + p["bq"]
-    out = _grouped_attention(q, k, v, causal=causal)
+    out = _grouped_attention(q, k, v, causal=causal, valid=token_mask)
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (k, v)
 
 
@@ -228,8 +233,9 @@ def gqa_decode(p: Params, cfg, x, cache_k, cache_v, pos):
 
 
 # ------------------------------------------------------------------- MLA
-def mla_forward(p: Params, cfg, x, positions):
-    """Full-sequence MLA (train / prefill).
+def mla_forward(p: Params, cfg, x, positions, *, token_mask=None):
+    """Full-sequence MLA (train / prefill). `token_mask` as in
+    gqa_forward: pad keys masked for bucketed masked prefill.
 
     Standard path expands the latent to per-head K/V. Under sequence
     parallelism the ABSORBED formulation runs instead (§Perf): scores and
@@ -258,7 +264,7 @@ def mla_forward(p: Params, cfg, x, positions):
         d_qk = m.qk_nope_head_dim + m.qk_rope_head_dim
         q_eff = q_eff * ((m.kv_lora_rank + m.qk_rope_head_dim) / d_qk) ** 0.5
         o_lat = _grouped_attention(
-            q_eff, k_eff, ckv[:, :, None, :], causal=True
+            q_eff, k_eff, ckv[:, :, None, :], causal=True, valid=token_mask
         )  # [B,S,H,r]
         out = jnp.einsum("bshr,rhk->bshk", o_lat, wv_b)
         return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (ckv, krope[:, :, 0, :])
@@ -270,7 +276,7 @@ def mla_forward(p: Params, cfg, x, positions):
         axis=-1,
     )
     qf = jnp.concatenate([q_nope, q_rope], axis=-1)
-    out = _grouped_attention(qf, k, v, causal=True)
+    out = _grouped_attention(qf, k, v, causal=True, valid=token_mask)
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (ckv, krope[:, :, 0, :])
 
 

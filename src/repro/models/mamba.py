@@ -41,7 +41,9 @@ def init_mamba(rng, cfg) -> Params:
 
 
 def _ssm_inputs(p: Params, cfg, xz, conv_state=None):
-    """Shared pre-scan computation. xz: [B, S, D]."""
+    """Shared pre-scan computation. xz: [B, S, D]. The trailing `xc`
+    return is the conv input with its causal pad prepended — masked
+    prefill gathers per-row conv states out of it."""
     mc, di, dtr = _dims(cfg)
     xi = jnp.einsum("bsd,de->bse", xz, p["in_proj"])
     x, z = jnp.split(xi, 2, axis=-1)  # [B,S,Di] each
@@ -68,16 +70,30 @@ def _ssm_inputs(p: Params, cfg, xz, conv_state=None):
     bx = (dt * x.astype(jnp.float32))[..., None] * b_ssm.astype(jnp.float32)[
         :, :, None, :
     ]  # [B,S,Di,N]
-    return x, z, abar, bx, c_ssm, new_conv_state
+    return x, z, abar, bx, c_ssm, new_conv_state, xc
 
 
 def mamba_forward(
-    p: Params, cfg, xz: jnp.ndarray, chunk: int = 128, return_state: bool = False
+    p: Params, cfg, xz: jnp.ndarray, chunk: int = 128, return_state: bool = False,
+    token_mask: jnp.ndarray | None = None,
 ):
-    """Full-sequence forward. xz: [B, S, D] -> [B, S, D]."""
+    """Full-sequence forward. xz: [B, S, D] -> [B, S, D].
+
+    `token_mask` [B, S] bool marks real (non-pad) tokens for bucketed
+    masked prefill (right padding). Masked steps carry the SSM state
+    through unchanged (abar=1, bx=0), and the returned conv state is
+    gathered from the window ending at each row's LAST REAL token, so
+    the final {ssm, conv} caches equal an unpadded forward of the same
+    row (tests/test_masked_prefill.py). Outputs at pad positions are
+    unspecified.
+    """
     mc, di, _ = _dims(cfg)
     b, s, d = xz.shape
-    x, z, abar, bx, c_ssm, new_conv = _ssm_inputs(p, cfg, xz)
+    x, z, abar, bx, c_ssm, new_conv, xc = _ssm_inputs(p, cfg, xz)
+    if token_mask is not None:
+        live = token_mask[..., None, None]  # [B,S,1,1]
+        abar = jnp.where(live, abar, 1.0)  # identity transition on pads
+        bx = jnp.where(live, bx, 0.0)
 
     chunk = min(chunk, s)
     assert s % chunk == 0, (s, chunk)
@@ -107,6 +123,14 @@ def mamba_forward(
     y = y.astype(xz.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(xz.dtype)
     out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
     if return_state:
+        if token_mask is not None and mc.d_conv > 1:
+            # conv window ending at the last real token: input position t
+            # lives at xc index t + (d_conv - 1), so the window covering
+            # positions [L-d_conv+1, L-1] is xc[L : L+d_conv-1] (short
+            # rows fall back onto the zero pad, as in the unpadded case)
+            lengths = token_mask.sum(-1).astype(jnp.int32)  # [B]
+            gidx = lengths[:, None] + jnp.arange(mc.d_conv - 1)[None, :]
+            new_conv = jnp.take_along_axis(xc, gidx[..., None], axis=1)
         return out, {"ssm": h_last, "conv": new_conv}
     return out
 
@@ -121,7 +145,7 @@ def mamba_init_state(cfg, batch: int, dtype):
 
 def mamba_decode(p: Params, cfg, xz: jnp.ndarray, state):
     """Single-token step. xz: [B, 1, D]; state: {ssm, conv}."""
-    x, z, abar, bx, c_ssm, new_conv = _ssm_inputs(p, cfg, xz, state["conv"])
+    x, z, abar, bx, c_ssm, new_conv, _ = _ssm_inputs(p, cfg, xz, state["conv"])
     h = abar[:, 0] * state["ssm"] + bx[:, 0]  # [B,Di,N]
     y = jnp.einsum("bin,bn->bi", h, c_ssm[:, 0].astype(jnp.float32))
     y = y + p["D"] * x[:, 0].astype(jnp.float32)

@@ -205,13 +205,20 @@ def apply_layer(
     causal: bool = True,
     tiered_state: Params | None = None,
     cold_capacity_frac: float = 0.25,
-    token_mask: jnp.ndarray | None = None,  # [B, S] valid-token mask (MoE counts)
+    token_mask: jnp.ndarray | None = None,  # [B, S] valid-token mask
 ):
     """Returns (x, aux_loss, expert_counts, new_cache).
 
     When `tiered_state` is given (serving path of MoE archs), the routed
     experts execute through the TriMoE three-tier runtime
     (serving/tiered_moe.py) instead of the flat training MoE.
+
+    `token_mask` marks real tokens. In decode mode ([B, 1]) it masks
+    dead batch slots out of MoE dispatch/counts. In full mode ([B, S],
+    bucketed masked prefill with right padding) it additionally masks
+    pad KEYS out of attention and makes the recurrent mixers carry
+    state through pad steps, so the returned caches match an unpadded
+    forward of each row's real prefix.
     """
     mixer, ffn = sig
     e = cfg.moe.n_experts if cfg.moe is not None else 1
@@ -219,15 +226,21 @@ def apply_layer(
     counts = jnp.zeros((e,), jnp.int32)
     new_cache: Params = {}
 
+    fmask = token_mask if mode == "full" else None  # [B, S] prefill mask
     h = rmsnorm(p["norm1"], x, cfg.norm_eps)
     if mixer in ("attn", "mla"):
         if mode == "full":
             if mixer == "attn":
-                y, (k, v) = attn.gqa_forward(p["mixer"], cfg, h, positions, causal=causal)
+                y, (k, v) = attn.gqa_forward(
+                    p["mixer"], cfg, h, positions, causal=causal,
+                    token_mask=fmask,
+                )
                 if cache is not None:
                     new_cache.update(k=k, v=v)
             else:
-                y, (ckv, krope) = attn.mla_forward(p["mixer"], cfg, h, positions)
+                y, (ckv, krope) = attn.mla_forward(
+                    p["mixer"], cfg, h, positions, token_mask=fmask
+                )
                 if cache is not None:
                     new_cache.update(ckv=ckv, krope=krope)
         else:
@@ -242,30 +255,36 @@ def apply_layer(
     elif mixer == "mamba":
         if mode == "full":
             if cache is not None:
-                y, st = mb.mamba_forward(p["mixer"], cfg, h, return_state=True)
+                y, st = mb.mamba_forward(
+                    p["mixer"], cfg, h, return_state=True, token_mask=fmask
+                )
                 new_cache["state"] = st
             else:
-                y = mb.mamba_forward(p["mixer"], cfg, h)
+                y = mb.mamba_forward(p["mixer"], cfg, h, token_mask=fmask)
         else:
             y, st = mb.mamba_decode(p["mixer"], cfg, h, cache["state"])
             new_cache["state"] = st
     elif mixer == "mlstm":
         if mode == "full":
             if cache is not None:
-                y, st = xl.mlstm_forward(p["mixer"], cfg, h, return_state=True)
+                y, st = xl.mlstm_forward(
+                    p["mixer"], cfg, h, return_state=True, token_mask=fmask
+                )
                 new_cache["state"] = st
             else:
-                y = xl.mlstm_forward(p["mixer"], cfg, h)
+                y = xl.mlstm_forward(p["mixer"], cfg, h, token_mask=fmask)
         else:
             y, st = xl.mlstm_decode(p["mixer"], cfg, h, cache["state"])
             new_cache["state"] = st
     elif mixer == "slstm":
         if mode == "full":
             if cache is not None:
-                y, st = xl.slstm_forward(p["mixer"], cfg, h, return_state=True)
+                y, st = xl.slstm_forward(
+                    p["mixer"], cfg, h, return_state=True, token_mask=fmask
+                )
                 new_cache["state"] = st
             else:
-                y = xl.slstm_forward(p["mixer"], cfg, h)
+                y = xl.slstm_forward(p["mixer"], cfg, h, token_mask=fmask)
         else:
             y, st = xl.slstm_decode(p["mixer"], cfg, h, cache["state"])
             new_cache["state"] = st
@@ -295,8 +314,13 @@ def apply_layer(
                 )
                 x = x + y_moe
             else:
+                # masked prefill runs dropless: capacity depends on the
+                # PADDED token count, so capacity-bounded dropping would
+                # make padded and unpadded prefill diverge
                 out = moe_lib.moe_forward(
-                    p["ffn"], cfg, h2, full_capacity=(mode == "decode")
+                    p["ffn"], cfg, h2,
+                    full_capacity=(mode == "decode" or token_mask is not None),
+                    token_mask=token_mask,
                 )
                 x = x + out.y
                 aux = out.aux_loss
@@ -396,6 +420,7 @@ def prefill(
     cache_len: int | None = None,
     tiered: Params | None = None,
     cold_capacity_frac: float = 0.25,
+    token_mask: jnp.ndarray | None = None,
 ):
     """Full-sequence prefill building the decode cache.
 
@@ -408,6 +433,14 @@ def prefill(
     decode_step's): serving engines hold stripped params (expert weights
     live only in tier buffers), so their prefill must route MoE layers
     through the tiered runtime too.
+
+    `token_mask` [B, S] bool enables bucketed masked prefill: rows are
+    RIGHT-padded to a shared bucket width, pad keys are masked out of
+    attention, recurrent mixers carry state through pad steps, pad K/V
+    cache entries are zeroed, and the returned logits are each row's
+    LAST REAL token's (an all-pad row yields row 0's position — callers
+    discard those rows). The result is identical to per-row unpadded
+    prefill (tests/test_masked_prefill.py, test_bucketed_properties.py).
     """
     tokens = batch["tokens"]
     b, s = tokens.shape
@@ -422,13 +455,19 @@ def prefill(
         enc_out = _run_encoder(params, cfg, batch["frames"])
 
     def merge(c: Params, nc: Params) -> Params:
-        """Place fresh seq-indexed entries at the head of the ring buffer."""
+        """Place fresh seq-indexed entries at the head of the ring buffer,
+        zeroing pad positions so the cache rows equal unpadded prefill's."""
         out = dict(c)
         for key, val in nc.items():
-            if key in ("k", "v", "ckv", "krope") and val.shape[1] != c[key].shape[1]:
-                out[key] = jax.lax.dynamic_update_slice_in_dim(c[key], val, 0, axis=1)
-            else:
-                out[key] = val
+            if key in ("k", "v", "ckv", "krope"):
+                if token_mask is not None and val.shape[1] == s:
+                    m = token_mask.reshape(b, s, *([1] * (val.ndim - 2)))
+                    val = val * m.astype(val.dtype)
+                if val.shape[1] != c[key].shape[1]:
+                    val = jax.lax.dynamic_update_slice_in_dim(
+                        c[key], val, 0, axis=1
+                    )
+            out[key] = val
         return out
 
     cache_out: Params = {}
@@ -442,6 +481,7 @@ def prefill(
         x, _, _, nc = apply_layer(
             cfg, sig, p, x, positions, mode="full", cache=c,
             tiered_state=ts, cold_capacity_frac=cold_capacity_frac,
+            token_mask=token_mask,
         )
         cache_out[f"layer{li}"] = merge(c, nc)
 
@@ -459,13 +499,20 @@ def prefill(
             x, _, _, nc = apply_layer(
                 cfg, sig, lp, x, positions, mode="full", cache=c,
                 tiered_state=ts, cold_capacity_frac=cold_capacity_frac,
+                token_mask=token_mask,
             )
             new_caches[f"slot{j}"] = merge(c, nc)
         return x, new_caches
 
     x, stack_cache = jax.lax.scan(body, x, (params["stack"], tiered_stack or {}))
     cache_out["stack"] = stack_cache
-    logits = _logits(params, cfg, x[:, -1:, :])[:, 0]
+    if token_mask is None:
+        x_last = x[:, -1:, :]
+    else:
+        # per-row gather of the last REAL token's hidden state
+        last = jnp.maximum(token_mask.sum(-1).astype(jnp.int32) - 1, 0)
+        x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)
+    logits = _logits(params, cfg, x_last)[:, 0]
     return logits, cache_out
 
 

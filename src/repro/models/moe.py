@@ -92,7 +92,7 @@ def shared_ffn(p: Params, x: jnp.ndarray) -> jnp.ndarray:
 
 def moe_forward(
     p: Params, cfg, x: jnp.ndarray, *, capacity_factor=None, full_capacity=False,
-    grouped: bool | None = None,
+    grouped: bool | None = None, token_mask=None,
 ) -> MoEOutput:
     """Routed MoE. Two dispatch strategies:
 
@@ -103,6 +103,11 @@ def moe_forward(
       distributed-sort-network collectives of the global path.
     global (decode / tiny batches): one flat sort with per-expert
       capacity = t (dropless).
+
+    `token_mask` [B, S] bool (bucketed masked prefill / dead decode
+    slots): masked tokens are excluded from dispatch, counts, and the
+    aux loss, so padding never displaces real tokens or pollutes the
+    load signal. Global path only.
     """
     mo = cfg.moe
     b, s, d = x.shape
@@ -113,11 +118,14 @@ def moe_forward(
         # default until the shard_map all-to-all variant lands.
         grouped = False
     if grouped:
+        assert token_mask is None, "grouped dispatch has no masked variant"
         return _moe_forward_grouped(p, cfg, x, capacity_factor)
-    return _moe_forward_global(p, cfg, x, capacity_factor, full_capacity)
+    return _moe_forward_global(p, cfg, x, capacity_factor, full_capacity,
+                               token_mask)
 
 
-def _moe_forward_global(p, cfg, x, capacity_factor, full_capacity) -> MoEOutput:
+def _moe_forward_global(p, cfg, x, capacity_factor, full_capacity,
+                        token_mask=None) -> MoEOutput:
     mo = cfg.moe
     e, k = mo.n_experts, mo.top_k
     b, s, d = x.shape
@@ -131,18 +139,25 @@ def _moe_forward_global(p, cfg, x, capacity_factor, full_capacity) -> MoEOutput:
     flat = x.reshape(t, d)
     logits = jnp.einsum("td,de->te", flat.astype(jnp.float32), p["router"])
     probs, w, idx = router_topk(logits, k)
+    live = None if token_mask is None else token_mask.reshape(t)
 
     # --- flatten (token, expert) assignments and sort by expert ---
     a_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
     a_exp = idx.reshape(-1).astype(jnp.int32)
     a_w = w.reshape(-1)
-    order = jnp.argsort(a_exp, stable=True)
-    se, st, sw = a_exp[order], a_tok[order], a_w[order]
+    if live is None:
+        a_key = a_exp
+    else:
+        # pad assignments get a sentinel expert id e: they sort past every
+        # real assignment, so they can never claim capacity from one
+        a_key = jnp.where(jnp.repeat(live, k), a_exp, e)
+    order = jnp.argsort(a_key, stable=True)
+    se, st, sw = a_key[order], a_tok[order], a_w[order]
     # rank within expert group (se is sorted)
     pos = jnp.arange(t * k, dtype=jnp.int32) - jnp.searchsorted(
         se, se, side="left"
     ).astype(jnp.int32)
-    keep = pos < cap
+    keep = (pos < cap) & (se < e)
     slot = jnp.where(keep, se * cap + pos, e * cap)  # overflow row dropped
 
     # --- dispatch: scatter into [E*cap(+1), D] buffers ---
@@ -159,9 +174,17 @@ def _moe_forward_global(p, cfg, x, capacity_factor, full_capacity) -> MoEOutput:
         y = y + shared_ffn(p["shared"], x)
 
     # --- load-balance aux loss (Switch-style) + expert load counts ---
-    counts = jnp.zeros((e,), jnp.int32).at[a_exp].add(1)
-    frac_tokens = counts.astype(jnp.float32) / (t * k)
-    frac_probs = probs.mean(0)
+    if live is None:
+        counts = jnp.zeros((e,), jnp.int32).at[a_exp].add(1)
+        frac_tokens = counts.astype(jnp.float32) / (t * k)
+        frac_probs = probs.mean(0)
+    else:
+        counts = jnp.zeros((e,), jnp.int32).at[a_exp].add(
+            jnp.repeat(live, k).astype(jnp.int32)
+        )
+        n_live = jnp.maximum(live.sum().astype(jnp.float32), 1.0)
+        frac_tokens = counts.astype(jnp.float32) / (n_live * k)
+        frac_probs = (probs * live[:, None]).sum(0) / n_live
     aux = mo.router_aux_coef * e * jnp.sum(frac_tokens * frac_probs)
     return MoEOutput(y, aux, counts)
 

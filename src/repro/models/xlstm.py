@@ -75,7 +75,22 @@ def _mlstm_inputs(p: Params, cfg, x):
     return q, k, v, ig, fg, og, z
 
 
-def mlstm_forward(p: Params, cfg, x: jnp.ndarray, return_state: bool = False):
+def _carry_through(new_state, old_state, live_t):
+    """Per-row select: masked (pad) steps keep the old recurrent state.
+    live_t: [B] bool for this time step."""
+    return jax.tree.map(
+        lambda nv, ov: jnp.where(
+            live_t.reshape((-1,) + (1,) * (nv.ndim - 1)), nv, ov
+        ),
+        new_state, old_state,
+    )
+
+
+def mlstm_forward(p: Params, cfg, x: jnp.ndarray, return_state: bool = False,
+                  token_mask: jnp.ndarray | None = None):
+    """token_mask [B, S]: pad steps (bucketed masked prefill, right
+    padding) carry {C, n, m} through unchanged, so the final state equals
+    an unpadded forward of each row's real prefix."""
     di, h, dh = _m_dims(cfg)
     b, s, _ = x.shape
     q, k, v, ig, fg, og, z = _mlstm_inputs(p, cfg, x)
@@ -84,9 +99,17 @@ def mlstm_forward(p: Params, cfg, x: jnp.ndarray, return_state: bool = False):
         st, h_t = _mlstm_cell(st, inp)
         return st, h_t
 
+    def step_masked(st, inp):
+        *qkvif, live_t = inp
+        new, h_t = _mlstm_cell(st, tuple(qkvif))
+        return _carry_through(new, st, live_t), h_t
+
     xs = tuple(
         a.transpose(1, 0, 2, 3).astype(jnp.float32) for a in (q, k, v)
     ) + tuple(a.transpose(1, 0, 2) for a in (ig, fg))
+    if token_mask is not None:
+        xs = xs + (token_mask.transpose(1, 0),)
+        step = step_masked
     st, hs = jax.lax.scan(step, mlstm_init_state(cfg, b), xs)
     hseq = hs.transpose(1, 0, 2, 3).reshape(b, s, di)
     y = (hseq * og).astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
@@ -144,7 +167,10 @@ def _slstm_cell(p: Params, st, x_t):
     return {"c": c, "n": n, "h": h, "m": m_new}
 
 
-def slstm_forward(p: Params, cfg, x: jnp.ndarray, return_state: bool = False):
+def slstm_forward(p: Params, cfg, x: jnp.ndarray, return_state: bool = False,
+                  token_mask: jnp.ndarray | None = None):
+    """token_mask [B, S]: pad steps carry {c, n, h, m} through unchanged
+    (see mlstm_forward)."""
     b, s, d = x.shape
     xin = jnp.einsum("bsd,de->bse", x, p["w_in"])
 
@@ -152,7 +178,16 @@ def slstm_forward(p: Params, cfg, x: jnp.ndarray, return_state: bool = False):
         st = _slstm_cell(p, st, x_t)
         return st, st["h"]
 
-    st, hs = jax.lax.scan(step, slstm_init_state(cfg, b), xin.transpose(1, 0, 2))
+    def step_masked(st, inp):
+        x_t, live_t = inp
+        st = _carry_through(_slstm_cell(p, st, x_t), st, live_t)
+        return st, st["h"]
+
+    xs = xin.transpose(1, 0, 2)
+    if token_mask is not None:
+        xs = (xs, token_mask.transpose(1, 0))
+        step = step_masked
+    st, hs = jax.lax.scan(step, slstm_init_state(cfg, b), xs)
     h = hs.transpose(1, 0, 2).astype(x.dtype)
     out = h + mlp(p["ffn"], h)
     return (out, st) if return_state else out

@@ -1,4 +1,4 @@
-from repro.serving.batching import Request, ZigzagBatcher
+from repro.serving.batching import BucketTable, Request, ZigzagBatcher
 from repro.serving.engine import (
     TriMoEServingEngine,
     fill_tiers_from_params,
@@ -23,7 +23,7 @@ from repro.serving.tiered_moe import (
 )
 
 __all__ = [
-    "Request", "ZigzagBatcher", "TriMoEServingEngine",
+    "BucketTable", "Request", "ZigzagBatcher", "TriMoEServingEngine",
     "fill_tiers_from_params", "init_tiered_for_model", "strip_expert_weights",
     "SlotKVCache", "cache_bytes", "cache_spec", "gather_slots", "reset_slots",
     "scatter_slots", "LoopStats", "ServingLoop", "TierSizes",

@@ -10,9 +10,55 @@ allocation into a fixed decode batch, and zigzag group rotation.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+
+@dataclass(frozen=True)
+class BucketTable:
+    """Prompt-length buckets for padded prefill.
+
+    Admission pads every prompt up to the smallest bucket width >= its
+    length, so the jitted prefill only ever sees len(widths) distinct
+    shapes — the compile-count bound the CI gate asserts
+    (benchmarks/serving_bench.py --mixed).
+    """
+
+    widths: Tuple[int, ...]
+
+    def __post_init__(self):
+        assert self.widths, "bucket table needs at least one width"
+        assert all(w > 0 for w in self.widths)
+        assert list(self.widths) == sorted(set(self.widths)), (
+            f"bucket widths must be strictly ascending: {self.widths}"
+        )
+
+    def __len__(self) -> int:
+        return len(self.widths)
+
+    def bucket_of(self, length: int) -> int:
+        """Smallest bucket width that fits `length`."""
+        for w in self.widths:
+            if length <= w:
+                return w
+        raise ValueError(
+            f"prompt length {length} exceeds the largest bucket "
+            f"({self.widths[-1]}); widen the table or the cache"
+        )
+
+    @classmethod
+    def powers_of_two(cls, max_width: int, min_width: int = 8) -> "BucketTable":
+        """Powers of two from min_width up, capped by (and always
+        including) max_width — e.g. max 24 -> (8, 16, 24)."""
+        assert max_width >= 1
+        widths: List[int] = []
+        w = min_width
+        while w < max_width:
+            widths.append(w)
+            w *= 2
+        widths.append(max_width)
+        return cls(tuple(widths))
 
 
 @dataclass
@@ -43,19 +89,40 @@ class ZigzagBatcher:
     `n_groups` micro-batches share the device; group g is active on steps
     where step % n_groups == g, letting expert fetch for one group overlap
     another group's compute (the paper's high-throughput setting).
+
+    With a `bucket_table`, admission is BUCKET-AWARE: queued requests
+    whose prompt lengths fall in the same bucket are admitted together
+    (FIFO within the head-of-queue's bucket) so the loop can batch them
+    into one padded prefill call. A partial cohort is held back for more
+    same-bucket arrivals, but never past `max_admit_wait` admit calls —
+    the starvation cap for lone long prompts (test_batching.py).
     """
 
-    def __init__(self, batch_size: int, n_groups: int = 2):
+    def __init__(self, batch_size: int, n_groups: int = 2,
+                 bucket_table: Optional[BucketTable] = None,
+                 max_admit_wait: int = 4):
         assert batch_size % n_groups == 0
         self.batch_size = batch_size
         self.n_groups = n_groups
+        self.bucket_table = bucket_table
+        self.max_admit_wait = max_admit_wait
         self.slots = [BatchSlot() for _ in range(batch_size)]
         self.queue: List[Request] = []
         self.step_idx = 0
         self.completed: List[Request] = []
+        self._admit_calls = 0
+        self._enqueued_at: Dict[int, int] = {}  # id(req) -> admit-call no.
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+        self._enqueued_at[id(req)] = self._admit_calls
+
+    def _place(self, req: Request, filled: List[int]) -> None:
+        i = next(j for j, s in enumerate(self.slots) if s.request is None)
+        self.slots[i].request = req
+        self.slots[i].pos = len(req.prompt)
+        self._enqueued_at.pop(id(req), None)
+        filled.append(i)
 
     def admit(self) -> Tuple[List[int], List[int]]:
         """Recycle done slots and admit queued requests into free slots.
@@ -65,14 +132,47 @@ class ZigzagBatcher:
         reuse); `filled` are slots newly holding an admitted request,
         which needs a prefill before it can join decode. A slot can
         appear in both lists (recycled and immediately refilled).
+
+        Without a bucket table admission is plain FIFO. With one, the
+        head of the queue anchors a same-bucket cohort (gathered in FIFO
+        order from anywhere in the queue — that coalescing past other
+        buckets is the point of bucketing); the cohort is admitted when
+        it fills every free slot, when the whole queue shares its bucket
+        (no other bucket to wait behind), or when the head has waited
+        `max_admit_wait` admit calls (starvation cap). Holding a cohort
+        blocks admission for that call, so the queue HEAD is never
+        overtaken; a non-head request of another bucket can be, but only
+        until it reaches the head, where the same cap bounds its wait.
         """
         freed = self.recycle()
         filled: List[int] = []
-        for i, s in enumerate(self.slots):
-            if s.request is None and self.queue:
-                s.request = self.queue.pop(0)
-                s.pos = len(s.request.prompt)
-                filled.append(i)
+        self._admit_calls += 1
+        if self.bucket_table is None:
+            while self.queue and any(s.request is None for s in self.slots):
+                self._place(self.queue.pop(0), filled)
+            return freed, filled
+        while self.queue:
+            n_free = sum(s.request is None for s in self.slots)
+            if n_free == 0:
+                break
+            head = self.queue[0]
+            wb = self.bucket_table.bucket_of(head.prompt_len)
+            cohort_pos = [
+                j for j, r in enumerate(self.queue)
+                if self.bucket_table.bucket_of(r.prompt_len) == wb
+            ][:n_free]
+            waited = self._admit_calls - self._enqueued_at.get(
+                id(head), self._admit_calls
+            )
+            full = (len(cohort_pos) == n_free
+                    or len(cohort_pos) == len(self.queue))
+            if not full and waited < self.max_admit_wait:
+                break  # hold the partial cohort for same-bucket arrivals
+            cohort = [self.queue[j] for j in cohort_pos]
+            taken = set(cohort_pos)
+            self.queue = [r for j, r in enumerate(self.queue) if j not in taken]
+            for r in cohort:
+                self._place(r, filled)
         return freed, filled
 
     def recycle(self) -> List[int]:

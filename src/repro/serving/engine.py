@@ -153,6 +153,7 @@ class TriMoEServingEngine:
         plan_size: int = 4,  # paper §5.5: up to four experts per window
         thresholds: TierThresholds = TierThresholds(),
         cold_capacity_frac: float = 1.0,
+        prefill_rows: int = 4,  # bucketed prefill batch width (row pad)
     ):
         assert cfg.moe is not None, "TriMoE engine requires a routed-MoE arch"
         self.cfg = cfg
@@ -191,6 +192,17 @@ class TriMoEServingEngine:
             ),
             static_argnums=(3,),
         )
+
+        def prefill_masked(p, toks, lens, ts, cache_len):
+            mask = jnp.arange(toks.shape[1])[None, :] < lens[:, None]
+            return prefill(
+                p, cfg, {"tokens": toks}, cache_len=cache_len, tiered=ts,
+                cold_capacity_frac=cold_capacity_frac, token_mask=mask,
+            )
+
+        self._prefill_masked = jax.jit(prefill_masked, static_argnums=(4,))
+        self.prefill_rows = prefill_rows
+        self._prefill_shapes = set()  # (rows, width) fallback compile count
         self._migrate = jax.jit(apply_migrations)
         self._layer_keys = self._flatten_layer_keys()
 
@@ -253,26 +265,72 @@ class TriMoEServingEngine:
         self.stats.steps += 1
         return logits, counts
 
-    def prefill_slots(self, prompts, slot_indices):
+    def prefill_slots(self, prompts, slot_indices, lengths=None):
         """Prefill newly admitted requests into their cache slots.
 
-        prompts: [W, S] int32 (equal lengths — the loop admits per
-        request, so W is usually 1); runs the full-sequence forward
-        through the tiered MoE runtime (engine params are stripped) and
-        scatters the resulting rows into the slot cache. Returns the
-        last-token logits [W, V] — the first generated token.
+        prompts: [W, S] int32; runs the full-sequence forward through
+        the tiered MoE runtime (engine params are stripped) and scatters
+        the resulting rows into the slot cache. Returns per-row logits
+        [W, V] — the first generated token.
+
+        Without `lengths`, every row is exactly S real tokens (legacy
+        exact-length path: one compile per distinct S). With `lengths`
+        [W], rows are RIGHT-padded to a shared bucket width S and run
+        through the MASKED prefill: pad keys masked out of attention,
+        recurrent states carry through pads, each row's cache written at
+        its true length, logits gathered at the last real token. Rows
+        are additionally padded up to `prefill_rows` (excess chunked),
+        so the jit only ever compiles (prefill_rows, bucket_width)
+        shapes — at most one compile per bucket-table entry
+        (`prefill_compiles`).
         """
         assert self.kv.seq_len is not None, (
             "prefill_slots needs a SlotKVCache built with an explicit seq_len"
         )
-        prompts = jnp.asarray(prompts, jnp.int32)
-        logits, sub_cache = self._prefill(
-            self.params, prompts, self.tiered, self.kv.seq_len
-        )
-        self.kv.scatter(sub_cache, slot_indices)
-        self.stats.prefills += prompts.shape[0]
-        self.stats.prefill_tokens += int(prompts.shape[0] * prompts.shape[1])
-        return logits
+        if lengths is None:
+            prompts = jnp.asarray(prompts, jnp.int32)
+            logits, sub_cache = self._prefill(
+                self.params, prompts, self.tiered, self.kv.seq_len
+            )
+            self.kv.scatter(sub_cache, slot_indices)
+            self.stats.prefills += prompts.shape[0]
+            self.stats.prefill_tokens += int(prompts.shape[0] * prompts.shape[1])
+            return logits
+
+        prompts = np.asarray(prompts, np.int32)
+        lengths = np.asarray(lengths, np.int32)
+        n, width = prompts.shape
+        assert len(slot_indices) == n and lengths.shape == (n,)
+        assert np.all(lengths <= width) and np.all(lengths > 0)
+        r = self.prefill_rows
+        self._prefill_shapes.add((r, width))
+        out = []
+        for c0 in range(0, n, r):
+            nr = min(r, n - c0)
+            toks = np.zeros((r, width), np.int32)
+            lens = np.zeros((r,), np.int32)  # dummy rows: all-pad mask
+            toks[:nr] = prompts[c0:c0 + nr]
+            lens[:nr] = lengths[c0:c0 + nr]
+            logits, sub_cache = self._prefill_masked(
+                self.params, jnp.asarray(toks), jnp.asarray(lens),
+                self.tiered, self.kv.seq_len,
+            )
+            if nr < r:  # drop the dummy rows before scattering
+                sub_cache = gather_slots(sub_cache, list(range(nr)))
+            self.kv.scatter(sub_cache, list(slot_indices[c0:c0 + nr]))
+            out.append(logits[:nr])
+            self.stats.prefills += nr
+            self.stats.prefill_tokens += int(lens.sum())
+        return out[0] if len(out) == 1 else jnp.concatenate(out)
+
+    @property
+    def prefill_compiles(self) -> int:
+        """Distinct jit compiles of the bucketed masked prefill — the
+        quantity the CI compile-count gate bounds by len(bucket_table)."""
+        try:
+            return int(self._prefill_masked._cache_size())
+        except AttributeError:  # older jax: fall back to shape counting
+            return len(self._prefill_shapes)
 
     # ---------------------------------------------------------- migration
     def replan(self, counts: np.ndarray) -> None:

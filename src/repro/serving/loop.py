@@ -13,14 +13,16 @@ engine:
     └─ TriMoEServingEngine — jitted tiered decode / prefill / migration
 
 Per iteration: (1) recycle finished slots (evicting their cache rows)
-and admit queued requests — each admission runs a prefill that writes
-the prompt's cache rows in place and samples the first token from the
-prefill logits; (2) decode the active zigzag group at its per-slot
-positions (fixed group width — dead slots are masked, so the decode
-step compiles once); (3) while that step is in flight on the device,
-the host replans expert migrations from the PREVIOUS group's realized
-loads — the zigzag overlap of migration and compute; (4) record
-sampled tokens and rotate to the next group.
+and admit queued requests — admissions sharing a prompt-length bucket
+are padded to the bucket width and prefilled in ONE masked prefill
+call that writes each row's cache at its true length and samples the
+first token from the per-row last-real-token logits; (2) decode the
+active zigzag group at its per-slot positions (fixed group width —
+dead slots are masked, so the decode step compiles once); (3) while
+that step is in flight on the device, the host replans expert
+migrations from the PREVIOUS group's realized loads — the zigzag
+overlap of migration and compute; (4) record sampled tokens and rotate
+to the next group.
 
 Decoding is greedy and, with the engine default cold_capacity_frac=1.0,
 token-for-token identical to single-request generation (verified in
@@ -38,7 +40,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.tiers import TierThresholds
 from repro.models.layers import Params
-from repro.serving.batching import Request, ZigzagBatcher
+from repro.serving.batching import BucketTable, Request, ZigzagBatcher
 from repro.serving.engine import (
     TriMoEServingEngine,
     fill_tiers_from_params,
@@ -91,12 +93,16 @@ class ServingLoop:
     request needs prompt_len + max_new_tokens - 1 <= cache_len to avoid
     ring wrap-around).
 
-    Known example-scale limitation: admission prefills per request at
-    the prompt's exact length, so each DISTINCT prompt length jit-
-    compiles the prefill once. Length bucketing (pad to a few bucket
-    widths + per-row logit gather) would bound compiles, but needs
-    masked recurrent-state prefill to stay correct for mamba/xlstm
-    mixers — tracked in ROADMAP.md.
+    Prefill is LENGTH-BUCKETED by default: `bucket_table` (default
+    powers-of-two widths capped at cache_len) pads every admitted
+    prompt to its bucket width and batches same-bucket admissions into
+    one masked prefill call of up to `prefill_rows` rows, so a
+    mixed-length trace compiles the prefill at most len(bucket_table)
+    times (engine.prefill_compiles; gated in CI via
+    benchmarks/serving_bench.py --mixed). Pass bucket_table=None for
+    the legacy exact-length path (one compile per distinct prompt
+    length). `max_admit_wait` caps how many admit rounds a partial
+    same-bucket cohort may be held back (starvation cap).
     """
 
     def __init__(
@@ -113,6 +119,9 @@ class ServingLoop:
         thresholds: TierThresholds = TierThresholds(),
         cold_capacity_frac: float = 1.0,
         rng_seed: int = 1,
+        bucket_table: "BucketTable | None | str" = "auto",
+        prefill_rows: Optional[int] = None,
+        max_admit_wait: int = 4,
     ):
         assert cfg.moe is not None, "ServingLoop drives the TriMoE MoE path"
         if tiered is None:
@@ -122,11 +131,18 @@ class ServingLoop:
             tiered = init_tiered_for_model(jax.random.PRNGKey(rng_seed), cfg, sizes)
             tiered = fill_tiers_from_params(params, tiered, cfg)
         self.cfg = cfg
-        self.batcher = ZigzagBatcher(batch_size, n_groups)
+        if bucket_table == "auto":
+            bucket_table = BucketTable.powers_of_two(cache_len)
+        self.bucket_table = bucket_table
+        self.batcher = ZigzagBatcher(
+            batch_size, n_groups, bucket_table=bucket_table,
+            max_admit_wait=max_admit_wait,
+        )
         self.kv = SlotKVCache(cfg, batch_size, cache_len)
         self.engine = TriMoEServingEngine(
             cfg, params, self.kv, tiered, sizes=sizes, plan_size=plan_size,
             thresholds=thresholds, cold_capacity_frac=cold_capacity_frac,
+            prefill_rows=prefill_rows or min(batch_size, 4),
         )
         self.stats = LoopStats()
         self.completions: List[Request] = []
@@ -151,14 +167,39 @@ class ServingLoop:
             r = self.batcher.slots[i].request
             self._t_admit[r.rid] = time.time()
             self.stats.admitted += 1
-            # prefill writes the slot's cache rows in place; its logits
-            # sample the first generated token (no wasted re-decode of
-            # the last prompt token). Prompt-token accounting lives in
-            # engine.stats.prefill_tokens.
-            logits = self.engine.prefill_slots(r.prompt[None, :], [i])
-            t0 = int(np.asarray(jnp.argmax(logits[0], -1)))
-            r.generated.append(t0)
-            self.stats.generated_tokens += 1
+        if not filled:
+            return
+        # prefill writes the slots' cache rows in place; the per-row
+        # logits sample the first generated token (no wasted re-decode
+        # of the last prompt token). Prompt-token accounting lives in
+        # engine.stats.prefill_tokens.
+        if self.bucket_table is None:
+            for i in filled:  # legacy exact-length path
+                r = self.batcher.slots[i].request
+                logits = self.engine.prefill_slots(r.prompt[None, :], [i])
+                self._record_first(r, logits[0])
+            return
+        # batch same-bucket admissions into one padded masked prefill
+        groups: Dict[int, List[int]] = {}
+        for i in filled:
+            r = self.batcher.slots[i].request
+            groups.setdefault(
+                self.bucket_table.bucket_of(r.prompt_len), []
+            ).append(i)
+        for width, slots in sorted(groups.items()):
+            prompts = np.zeros((len(slots), width), np.int32)
+            lengths = np.zeros((len(slots),), np.int32)
+            for row, i in enumerate(slots):
+                r = self.batcher.slots[i].request
+                prompts[row, : r.prompt_len] = r.prompt
+                lengths[row] = r.prompt_len
+            logits = self.engine.prefill_slots(prompts, slots, lengths=lengths)
+            for row, i in enumerate(slots):
+                self._record_first(self.batcher.slots[i].request, logits[row])
+
+    def _record_first(self, r: Request, row_logits) -> None:
+        r.generated.append(int(np.asarray(jnp.argmax(row_logits, -1))))
+        self.stats.generated_tokens += 1
 
     def _drain_completed(self) -> None:
         while len(self.completions) < len(self.batcher.completed):

@@ -1,5 +1,6 @@
-"""Unit tests: ZigzagBatcher composition logic and the slot-managed
-KV cache (gather/scatter/reset + byte accounting)."""
+"""Unit tests: ZigzagBatcher composition logic (FIFO and bucket-aware
+admission with the starvation cap), the BucketTable policy, and the
+slot-managed KV cache (gather/scatter/reset + byte accounting)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,7 +8,7 @@ import pytest
 
 from repro.configs import get_config, reduce_for_smoke
 from repro.models.model import init_cache
-from repro.serving.batching import Request, ZigzagBatcher
+from repro.serving.batching import BucketTable, Request, ZigzagBatcher
 from repro.serving.kv_cache import (
     SlotKVCache,
     cache_bytes,
@@ -102,6 +103,73 @@ def test_next_batch_legacy_path_still_recycles():
     b.next_batch()  # recycles + admits rid=2
     assert {r.rid for r in b.completed} == {0, 1}
     assert b.slots[0].request.rid == 2
+
+
+# --------------------------------------------------------- bucket policy
+def test_bucket_table_powers_of_two():
+    assert BucketTable.powers_of_two(8).widths == (8,)
+    assert BucketTable.powers_of_two(16).widths == (8, 16)
+    assert BucketTable.powers_of_two(24).widths == (8, 16, 24)
+    assert BucketTable.powers_of_two(40, min_width=4).widths == (4, 8, 16, 32, 40)
+    t = BucketTable.powers_of_two(24)
+    assert t.bucket_of(1) == 8 and t.bucket_of(8) == 8
+    assert t.bucket_of(9) == 16 and t.bucket_of(17) == 24
+    with pytest.raises(ValueError):
+        t.bucket_of(25)
+    with pytest.raises(AssertionError):
+        BucketTable((16, 8))  # not ascending
+
+
+def test_bucket_admission_groups_same_bucket():
+    table = BucketTable((8, 16))
+    b = ZigzagBatcher(4, n_groups=2, bucket_table=table, max_admit_wait=2)
+    for i, plen in enumerate([5, 12, 7, 3]):  # buckets 8, 16, 8, 8
+        b.submit(_req(i, plen=plen))
+    # head (bucket 8) anchors a partial cohort (3 of 4 free slots, and a
+    # bucket-16 request is also queued): held for same-bucket arrivals
+    freed, filled = b.admit()
+    assert freed == [] and filled == []
+    # cap reached: cohort rids 0, 2, 3 admitted together (FIFO within the
+    # bucket); the now-homogeneous remainder (rid 1) follows in-call
+    _, filled = b.admit()
+    assert [b.slots[i].request.rid for i in filled] == [0, 2, 3, 1]
+    assert b.queue == []
+
+
+def test_bucket_admission_homogeneous_queue_never_waits():
+    """When every queued request shares one bucket there is nothing to
+    wait for: admit immediately even as a partial cohort."""
+    table = BucketTable((8, 16))
+    b = ZigzagBatcher(4, n_groups=2, bucket_table=table, max_admit_wait=100)
+    b.submit(_req(0, plen=5))
+    b.submit(_req(1, plen=7))
+    _, filled = b.admit()
+    assert [b.slots[i].request.rid for i in filled] == [0, 1]
+
+
+def test_bucket_admission_starvation_cap():
+    """A lone long prompt behind nothing of its bucket is held back at
+    most max_admit_wait admit calls, then admitted as a partial cohort."""
+    table = BucketTable((8, 16))
+    b = ZigzagBatcher(4, n_groups=2, bucket_table=table, max_admit_wait=3)
+    b.submit(_req(0, plen=12))  # bucket 16
+    b.submit(_req(1, plen=5))  # bucket 8 behind it
+    for call in range(2):  # partial cohort held (other buckets queued)
+        _, filled = b.admit()
+        assert filled == [], f"admitted too early on call {call}"
+    _, filled = b.admit()  # 3rd call: wait == max_admit_wait -> admit
+    assert [b.slots[i].request.rid for i in filled] == [0, 1]
+    assert b.queue == []
+
+
+def test_bucket_admission_fills_free_slots_immediately():
+    """A cohort that fills every free slot never waits."""
+    table = BucketTable((8,))
+    b = ZigzagBatcher(2, n_groups=1, bucket_table=table, max_admit_wait=100)
+    for i in range(3):
+        b.submit(_req(i, plen=4))
+    _, filled = b.admit()
+    assert len(filled) == 2 and len(b.queue) == 1
 
 
 # ------------------------------------------------------------- kv cache

@@ -1,0 +1,101 @@
+"""Property tests (hypothesis): bucketed masked prefill invariants.
+
+For random prompt lengths and random bucket tables, padding each prompt
+to its bucket width and running the masked prefill must produce logits
+and per-slot caches identical to prefilling each prompt alone at its
+exact length — for an attention-MoE config and a hybrid Mamba config.
+(The oracle also runs masked at exact length: see
+tests/test_masked_prefill.py for why the masked path is dropless.)
+
+BucketTable itself is also property-tested: bucket_of returns the
+smallest width that fits, for arbitrary tables.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.models.model import init_params, prefill
+from repro.serving.batching import BucketTable
+
+MAX_LEN = 12
+CACHE_LEN = 16
+
+
+@st.composite
+def lengths_and_table(draw):
+    lengths = draw(st.lists(
+        st.integers(min_value=1, max_value=MAX_LEN), min_size=1, max_size=3
+    ))
+    min_w = draw(st.sampled_from([2, 4, 8]))
+    table = BucketTable.powers_of_two(MAX_LEN, min_width=min_w)
+    return lengths, table
+
+
+@pytest.fixture(scope="module")
+def setups():
+    out = {}
+    for arch in ("granite-moe-1b-a400m", "jamba-v0.1-52b"):
+        cfg = reduce_for_smoke(get_config(arch))
+        out[arch] = (cfg, init_params(jax.random.PRNGKey(0), cfg))
+    return out
+
+
+@settings(max_examples=6, deadline=None)
+@given(lengths_and_table())
+def test_bucket_of_is_smallest_fit(lt):
+    lengths, table = lt
+    for ln in lengths:
+        w = table.bucket_of(ln)
+        assert ln <= w
+        smaller = [x for x in table.widths if x < w]
+        assert all(ln > x for x in smaller)
+    with pytest.raises(ValueError):
+        table.bucket_of(table.widths[-1] + 1)
+
+
+@pytest.mark.parametrize("arch", ["granite-moe-1b-a400m", "jamba-v0.1-52b"])
+@settings(max_examples=5, deadline=None)
+@given(lt=lengths_and_table(), seed=st.integers(0, 2 ** 16))
+def test_bucketed_prefill_matches_unpadded(arch, lt, seed, setups):
+    lengths, table = lt
+    cfg, params = setups[arch]
+    rng = np.random.default_rng(seed)
+    width = max(table.bucket_of(ln) for ln in lengths)
+    n = len(lengths)
+    toks = np.zeros((n, width), np.int32)
+    for i, ln in enumerate(lengths):
+        toks[i, :ln] = rng.integers(0, cfg.vocab_size, ln)
+    mask = jnp.arange(width)[None, :] < jnp.asarray(lengths)[:, None]
+    logits, cache = prefill(
+        params, cfg, {"tokens": jnp.asarray(toks)}, cache_len=CACHE_LEN,
+        token_mask=mask,
+    )
+    for i, ln in enumerate(lengths):
+        lo, c1 = prefill(
+            params, cfg, {"tokens": jnp.asarray(toks[i:i + 1, :ln])},
+            cache_len=CACHE_LEN, token_mask=jnp.ones((1, ln), bool),
+        )
+        np.testing.assert_allclose(
+            np.asarray(logits[i], np.float32), np.asarray(lo[0], np.float32),
+            rtol=2e-2, atol=2e-2,
+        )
+        for key in cache:
+            stacked = key == "stack"
+            row = jax.tree.map(
+                lambda a: a[:, i] if stacked else a[i], cache[key]
+            )
+            ora = jax.tree.map(
+                lambda a: a[:, 0] if stacked else a[0], c1[key]
+            )
+            jax.tree.map(
+                lambda a, b: np.testing.assert_allclose(
+                    np.asarray(a, np.float32), np.asarray(b, np.float32),
+                    rtol=2e-2, atol=2e-2,
+                ),
+                row, ora,
+            )

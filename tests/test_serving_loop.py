@@ -88,6 +88,43 @@ def test_loop_oversubscribed_queue_drains(setup):
     assert loop.engine.stats.prefills == 10
 
 
+def test_mixed_lengths_bucketed_compiles_and_matches_solo(setup):
+    """A mixed-length trace (>=6 distinct prompt lengths) stays within
+    len(bucket_table) distinct prefill compiles AND remains token-for-
+    token identical to single-request generation (acceptance criteria
+    for bucketed masked prefill)."""
+    cfg, params = setup
+    lengths = [3, 5, 7, 9, 12, 17]  # 6 distinct lengths, 3 buckets
+    new_tokens = 4
+    cache_len = max(lengths) + new_tokens
+    rng = np.random.default_rng(3)
+    reqs = [
+        Request(rid=rid,
+                prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+                max_new_tokens=new_tokens)
+        for rid, plen in enumerate(lengths)
+    ]
+
+    loop = ServingLoop(cfg, params, batch_size=4, n_groups=2,
+                       cache_len=cache_len)
+    for r in reqs:
+        loop.submit(copy.deepcopy(r))
+    done = loop.run(max_steps=500)
+    assert len(done) == len(lengths)
+    assert loop.engine.prefill_compiles <= len(loop.bucket_table)
+    batched = {r.rid: r.generated for r in done}
+
+    solo = ServingLoop(cfg, params, batch_size=1, n_groups=1,
+                       cache_len=cache_len)
+    for r in reqs:
+        solo.submit(copy.deepcopy(r))
+        solo.run(max_steps=200)
+    for r in solo.completions:
+        assert r.generated == batched[r.rid], (
+            f"rid={r.rid}: batched {batched[r.rid]} != solo {r.generated}"
+        )
+
+
 def test_loop_overlapped_replan_migrates(setup):
     """Zigzag groups: migrations still happen (deferred replan path)."""
     cfg, params = setup

@@ -1,18 +1,36 @@
 """CI gate: compare a pytest junit report against the seed-failure baseline.
 
 The seed repo ships with known-failing tests (tests/seed_failures.txt,
-one pytest node id per line, '#' comments allowed). CI must fail only on
-*regressions*:
+one pytest node id per line, '#' comments allowed). CI fails on:
 
-  * a test failing that is NOT in the baseline (new failure), or
+  * a test failing that is NOT in the baseline (new failure),
+  * a baseline entry that now PASSES (stale baseline — the ratchet:
+    fixes must be banked by trimming the baseline, or they can silently
+    regress later),
   * --min-passed N given and fewer than N tests passed (full-tier runs).
 
-Known baseline failures never block; baseline entries that now pass are
-reported so the baseline can be trimmed.
+Baseline entries that still fail never block. Entries absent from the
+report (e.g. @slow tests deselected in the fast tier) are ignored.
+
+Ratchet workflow — when a PR fixes a known seed failure:
+
+  1. CI (or a local run) fails with "stale baseline" naming the entries.
+  2. Regenerate the report and rewrite the baseline in one step:
+
+       PYTHONPATH=src python -m pytest -q --junitxml=report.xml || true
+       python tools/ci_check.py report.xml tests/seed_failures.txt \
+           --update-baseline
+
+     --update-baseline removes exactly the now-passing entries (comments
+     and still-failing/not-run entries are preserved) and exits 0.
+  3. Commit the trimmed tests/seed_failures.txt with the fix.
+
+NEW failures are never added to the baseline by this tool — fix them.
 
 Usage:
   python -m pytest -q --junitxml=report.xml || true
-  python tools/ci_check.py report.xml tests/seed_failures.txt [--min-passed N]
+  python tools/ci_check.py report.xml tests/seed_failures.txt \
+      [--min-passed N] [--update-baseline]
 """
 from __future__ import annotations
 
@@ -46,12 +64,25 @@ def collect(report_path: str):
     return passed, failed, skipped
 
 
+def rewrite_baseline(path: str, stale: set) -> None:
+    """Drop now-passing entries; keep comments, order, and every entry
+    that still fails or was not run in this report."""
+    with open(path) as f:
+        lines = f.readlines()
+    kept = [ln for ln in lines if ln.strip() not in stale]
+    with open(path, "w") as f:
+        f.writelines(kept)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("report")
     ap.add_argument("baseline")
     ap.add_argument("--min-passed", type=int, default=0,
                     help="fail if fewer tests passed (full-tier regression floor)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline dropping entries that now "
+                         "pass (the ratchet), instead of failing on them")
     args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
@@ -66,13 +97,24 @@ def main(argv=None) -> int:
 
     print(f"[ci_check] {len(passed)} passed, {len(failed)} failed "
           f"({len(known)} known / {len(new)} new), {len(skipped)} skipped")
-    if fixed:
-        print(f"[ci_check] {len(fixed)} baseline entries now PASS "
-              f"(trim tests/seed_failures.txt):")
-        for nid in fixed:
-            print(f"  fixed: {nid}")
 
     rc = 0
+    if fixed:
+        if args.update_baseline:
+            rewrite_baseline(args.baseline, set(fixed))
+            print(f"[ci_check] baseline updated: {len(fixed)} fixed "
+                  f"entr{'y' if len(fixed) == 1 else 'ies'} removed from "
+                  f"{args.baseline}:")
+            for nid in fixed:
+                print(f"  trimmed: {nid}")
+        else:
+            print(f"[ci_check] FAIL: stale baseline — {len(fixed)} "
+                  f"entr{'y' if len(fixed) == 1 else 'ies'} now PASS. "
+                  f"Bank the fix: rerun with --update-baseline and commit "
+                  f"{args.baseline}:")
+            for nid in fixed:
+                print(f"  stale: {nid}")
+            rc = 1
     if new:
         print(f"[ci_check] FAIL: {len(new)} new failure(s) vs seed baseline:")
         for nid in sorted(new):
