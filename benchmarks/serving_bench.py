@@ -1,7 +1,8 @@
 """Serving-loop throughput benchmark: tokens/sec vs batch width and
 zigzag group count (paper §2.2 — offloading throughput comes from large
 continuously refilled batches), plus a mixed-length trace mode that
-gates the bucketed-prefill compile count.
+gates the bucketed-prefill compile count and a shared-prefix replay
+mode that gates radix prefix reuse.
 
 Grid mode: each point builds a fresh ServingLoop on a smoke-scale MoE
 config, runs one untimed warmup pass (compilation), then times a full
@@ -14,16 +15,29 @@ len(bucket_table) times — the mode exits nonzero otherwise, which is
 the CI compile-count gate. Total backend compiles (decode, migration,
 ...) are also counted via the jax.monitoring compile hook.
 
+Prefix mode (--prefix): replays a shared-system-prompt workload (every
+request = one long shared prefix + a short unique suffix) through the
+paged KV loop twice — radix prefix cache ON vs OFF — and reports
+prefix hit-rate, peak blocks-in-use, and tokens/s for both. Exits
+nonzero unless hit-rate > 0, reuse is at least --min-speedup faster
+than no-reuse, and the PR-2 compile-count bound still holds.
+
+Results merge into one JSON keyed by mode, so CI can run --mixed and
+--prefix into the same BENCH_serving.json artifact.
+
   PYTHONPATH=src python benchmarks/serving_bench.py
   PYTHONPATH=src python benchmarks/serving_bench.py \
       --widths 1 4 8 --groups 1 2 --requests 16 --new-tokens 16
   PYTHONPATH=src python benchmarks/serving_bench.py --mixed --smoke \
+      --json BENCH_serving.json
+  PYTHONPATH=src python benchmarks/serving_bench.py --prefix --smoke \
       --json BENCH_serving.json
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 import jax
@@ -33,6 +47,25 @@ from repro.launch.serve import make_requests
 from repro.models.model import init_params
 from repro.serving.batching import Request
 from repro.serving.loop import ServingLoop
+
+
+def write_json(path, mode, result) -> None:
+    """Merge `result` under `mode` into the benchmark JSON (legacy flat
+    single-mode files are lifted into the keyed layout)."""
+    data = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            data = {}
+        if "mode" in data:  # pre-paged flat layout
+            data = {data["mode"]: data}
+    data[mode] = result
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[serving_bench] wrote {path} [{mode}]")
 
 
 class CompileCounter:
@@ -161,10 +194,7 @@ def run_mixed(args) -> int:
         "backend_compiles": cc.count,
     }
     if args.json:
-        with open(args.json, "w") as f:
-            json.dump(result, f, indent=2, sort_keys=True)
-            f.write("\n")
-        print(f"[serving_bench] wrote {args.json}")
+        write_json(args.json, "mixed", result)
 
     if len(done) != n_requests:
         print(f"[serving_bench] FAIL: only {len(done)}/{n_requests} completed")
@@ -174,6 +204,124 @@ def run_mixed(args) -> int:
               f"exceed the bucket-table size {len(table)}")
         return 1
     return 0
+
+
+# --------------------------------------------------- shared-prefix mode
+def run_prefix(args) -> int:
+    """Shared-system-prompt replay: every request is `--prefix-len`
+    shared tokens + a short unique suffix. Served twice through the
+    paged loop — radix prefix cache ON vs OFF — after an untimed warmup
+    pass on each (compilation; for the reuse loop it also seeds the
+    radix, so the timed pass measures steady-state serving)."""
+    from repro.serving.loop import LoopStats
+    from repro.serving.paged_kv import PagedStats
+
+    cfg = reduce_for_smoke(get_config(args.arch))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    import numpy as np
+
+    # smoke tier: prompt-heavy replay (one sampled token per request —
+    # the summarize/classify pattern) so the measured ratio is the
+    # prompt-processing saving, not smoke-scale decode dispatch overhead
+    new_tokens = 1 if args.smoke else args.new_tokens
+    n_requests = 12 if args.smoke else args.requests
+    shared = np.random.default_rng(5).integers(
+        0, cfg.vocab_size, args.prefix_len
+    ).astype(np.int32)
+    cache_len = args.prefix_len + args.suffix_len + new_tokens
+
+    def make_reqs(seed):
+        rng = np.random.default_rng(seed)
+        return [
+            Request(
+                rid=rid,
+                prompt=np.concatenate([
+                    shared,
+                    rng.integers(0, cfg.vocab_size, args.suffix_len)
+                    .astype(np.int32),
+                ]),
+                max_new_tokens=new_tokens,
+            )
+            for rid in range(n_requests)
+        ]
+
+    def serve(prefix_cache: bool):
+        loop = ServingLoop(
+            cfg, params, batch_size=args.prefix_batch, n_groups=2,
+            cache_len=cache_len, prefix_cache=prefix_cache,
+        )
+        for r in make_reqs(1):
+            loop.submit(r)
+        loop.run()  # warmup: compile + (reuse) seed the radix
+        loop.stats = LoopStats()
+        loop.kv.stats = PagedStats()
+        for r in make_reqs(2):
+            loop.submit(r)
+        loop.run()
+        return loop, loop.stats.completed  # timed-pass completions only
+
+    with CompileCounter() as cc:
+        reuse, done_r = serve(True)
+        noreuse, done_n = serve(False)
+    kv = reuse.kv
+    speedup = reuse.stats.tokens_per_s / max(noreuse.stats.tokens_per_s, 1e-9)
+    compiles = reuse.engine.prefill_compiles
+    table = reuse.bucket_table
+    print(f"[serving_bench] prefix replay: {n_requests} requests = "
+          f"{args.prefix_len} shared + {args.suffix_len} unique tokens, "
+          f"{new_tokens} new each")
+    print(f"[serving_bench] reuse:    {reuse.stats.summary()}")
+    print(f"[serving_bench] no-reuse: {noreuse.stats.summary()}")
+    print(f"[serving_bench] hit-rate {kv.stats.hit_rate:.2f} "
+          f"({kv.stats.hit_tokens}/{kv.stats.lookup_tokens} prompt tokens "
+          f"cached), peak blocks in use {kv.stats.peak_blocks_in_use}"
+          f"/{kv.n_blocks}, speedup {speedup:.2f}x "
+          f"(floor {args.min_speedup}x)")
+    print(f"[serving_bench] prefill compiles: {compiles} "
+          f"(bucket-table bound: {len(table)}); "
+          f"total backend compiles: {cc.count}")
+
+    result = {
+        "arch": cfg.name,
+        "requests": n_requests,
+        "prefix_len": args.prefix_len,
+        "suffix_len": args.suffix_len,
+        "new_tokens": new_tokens,
+        "batch": args.prefix_batch,
+        "block_size": kv.block_size,
+        "pool_blocks": kv.n_blocks,
+        "bucket_table": list(table.widths),
+        "tokens_per_s": round(reuse.stats.tokens_per_s, 1),
+        "tokens_per_s_no_reuse": round(noreuse.stats.tokens_per_s, 1),
+        "speedup": round(speedup, 2),
+        "prefix_hit_rate": round(kv.stats.hit_rate, 3),
+        "hit_tokens": kv.stats.hit_tokens,
+        "peak_blocks_in_use": kv.stats.peak_blocks_in_use,
+        "blocks_cached": kv.blocks_cached,
+        "prefill_compiles": compiles,
+        "backend_compiles": cc.count,
+    }
+    if args.json:
+        write_json(args.json, "prefix", result)
+
+    rc = 0
+    if done_r != n_requests or done_n != n_requests:
+        print(f"[serving_bench] FAIL: incomplete serve "
+              f"({done_r}/{done_n} of {n_requests})")
+        rc = 1
+    if kv.stats.hit_rate <= 0:
+        print("[serving_bench] FAIL: prefix hit-rate is zero on a "
+              "shared-prefix workload")
+        rc = 1
+    if speedup < args.min_speedup:
+        print(f"[serving_bench] FAIL: prefix reuse speedup {speedup:.2f}x "
+              f"< floor {args.min_speedup}x")
+        rc = 1
+    if compiles > len(table):
+        print(f"[serving_bench] FAIL: {compiles} distinct prefill compiles "
+              f"exceed the bucket-table size {len(table)}")
+        rc = 1
+    return rc
 
 
 def run_grid(args) -> int:
@@ -212,10 +360,7 @@ def run_grid(args) -> int:
                 f"w{w}g{g}": round(v, 1) for (w, g), v in tps.items()
             },
         }
-        with open(args.json, "w") as f:
-            json.dump(result, f, indent=2, sort_keys=True)
-            f.write("\n")
-        print(f"[serving_bench] wrote {args.json}")
+        write_json(args.json, "grid", result)
 
     if (1, 1) in tps and (8, 1) in tps:
         speedup = tps[(8, 1)] / tps[(1, 1)]
@@ -247,10 +392,24 @@ def main(argv=None):
                     help="number of distinct prompt lengths (>=6)")
     ap.add_argument("--mixed-batch", type=int, default=8)
     ap.add_argument("--mixed-groups", type=int, default=2)
+    ap.add_argument("--prefix", action="store_true",
+                    help="shared-system-prompt replay: gates prefix "
+                         "hit-rate > 0, >= --min-speedup over no-reuse, "
+                         "and the bucketed-prefill compile bound")
+    ap.add_argument("--prefix-len", type=int, default=48,
+                    help="shared system-prompt length (tokens)")
+    ap.add_argument("--suffix-len", type=int, default=4,
+                    help="unique per-request suffix length (tokens)")
+    ap.add_argument("--prefix-batch", type=int, default=4)
+    ap.add_argument("--min-speedup", type=float, default=1.3,
+                    help="required tokens/s ratio of prefix reuse over "
+                         "no-reuse (acceptance: >= 1.3)")
     args = ap.parse_args(argv)
 
     if args.mixed:
         return run_mixed(args)
+    if args.prefix:
+        return run_prefix(args)
     return run_grid(args)
 
 

@@ -177,14 +177,24 @@ def _seq_parallel_attention(q, k, v, *, q_chunk: int):
 
 # ------------------------------------------------------------------- GQA
 def gqa_forward(p: Params, cfg, x, positions, *, kv_override=None, causal=True,
-                token_mask=None):
+                token_mask=None, past=None):
     """Full-sequence attention (train / prefill / encoder / cross).
 
     `token_mask` [B, S] bool marks real tokens (bucketed masked prefill):
     pad positions are excluded as KEYS, so real queries never attend to
     padding; outputs at pad query positions are unspecified.
 
-    Returns (out, (k, v)) — k/v in [B, S, Kv, hd] layout for caching.
+    `past` = (past_k, past_v, past_valid) enables SUFFIX-ONLY prefill
+    against a cached context (paged KV / prefix cache): past_k/past_v
+    [B, P, Kv, hd] are already-roped cache entries gathered by block
+    table, past_valid [B, P] marks each row's real prefix length, and
+    `positions` must carry each row's ABSOLUTE positions [B, S]
+    (past_len + arange). Every real query may attend every valid past
+    key (the prefix is strictly older), so the causal iota base P from
+    Sk = P + S composes correctly with per-row prefix lengths.
+
+    Returns (out, (k, v)) — the NEW tokens' k/v in [B, S, Kv, hd]
+    layout for caching (past entries are never recomputed).
     """
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     if kv_override is None:
@@ -198,7 +208,18 @@ def gqa_forward(p: Params, cfg, x, positions, *, kv_override=None, causal=True,
         k, v = kv_override
         if "bq" in p:
             q = q + p["bq"]
-    out = _grouped_attention(q, k, v, causal=causal, valid=token_mask)
+    if past is None:
+        out = _grouped_attention(q, k, v, causal=causal, valid=token_mask)
+    else:
+        past_k, past_v, past_valid = past
+        b, s = x.shape[0], x.shape[1]
+        new_valid = (
+            jnp.ones((b, s), bool) if token_mask is None else token_mask
+        )
+        k_full = jnp.concatenate([past_k, k], axis=1)
+        v_full = jnp.concatenate([past_v, v], axis=1)
+        valid = jnp.concatenate([past_valid, new_valid], axis=1)
+        out = _grouped_attention(q, k_full, v_full, causal=causal, valid=valid)
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (k, v)
 
 
@@ -233,7 +254,7 @@ def gqa_decode(p: Params, cfg, x, cache_k, cache_v, pos):
 
 
 # ------------------------------------------------------------------- MLA
-def mla_forward(p: Params, cfg, x, positions, *, token_mask=None):
+def mla_forward(p: Params, cfg, x, positions, *, token_mask=None, past=None):
     """Full-sequence MLA (train / prefill). `token_mask` as in
     gqa_forward: pad keys masked for bucketed masked prefill.
 
@@ -243,7 +264,14 @@ def mla_forward(p: Params, cfg, x, positions, *, token_mask=None):
     shard_map KV gather moves ckv/krope (~150 MB/layer) instead of the
     expanded per-head K/V (~4.3 GB/layer).
 
-    Returns (out, (ckv, krope)) — the compressed cache entries.
+    `past` = (past_ckv [B, P, r], past_krope [B, P, rd], past_valid
+    [B, P]) enables suffix-only prefill against cached latents (paged
+    KV / prefix cache): past latents are re-expanded through wkv_b —
+    the same computation the cold path applies to its own latents — and
+    `positions` must be per-row absolute [B, S]. Standard path only.
+
+    Returns (out, (ckv, krope)) — the NEW tokens' compressed cache
+    entries.
     """
     m = cfg.mla
     h = cfg.n_heads
@@ -254,6 +282,32 @@ def mla_forward(p: Params, cfg, x, positions, *, token_mask=None):
     kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
     ckv, krope = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
     krope = apply_rope(krope[:, :, None, :], positions, cfg.rope_theta)  # [B,S,1,rd]
+
+    if past is not None:
+        past_ckv, past_krope, past_valid = past
+        b, s = x.shape[0], x.shape[1]
+        ckv_full = jnp.concatenate([past_ckv, ckv], axis=1)
+        krope_full = jnp.concatenate(
+            [past_krope[:, :, None, :], krope], axis=1
+        )
+        new_valid = (
+            jnp.ones((b, s), bool) if token_mask is None else token_mask
+        )
+        valid = jnp.concatenate([past_valid, new_valid], axis=1)
+        kvb = jnp.einsum("bsr,rhk->bshk", ckv_full, p["wkv_b"])
+        k_nope, v = jnp.split(kvb, [m.qk_nope_head_dim], axis=-1)
+        k = jnp.concatenate(
+            [k_nope,
+             jnp.broadcast_to(krope_full,
+                              (*k_nope.shape[:3], m.qk_rope_head_dim))],
+            axis=-1,
+        )
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = _grouped_attention(qf, k, v, causal=True, valid=valid)
+        return (
+            jnp.einsum("bshk,hkd->bsd", out, p["wo"]),
+            (ckv, krope[:, :, 0, :]),
+        )
 
     if _SEQ_PARALLEL is not None:
         wk_b, wv_b = jnp.split(p["wkv_b"], [m.qk_nope_head_dim], axis=-1)
@@ -318,3 +372,95 @@ def mla_decode(p: Params, cfg, x, cache_ckv, cache_krope, pos):
     o_lat = jnp.einsum("bhst,btr->bshr", pattn, cache_ckv)  # [B,1,H,r]
     o = jnp.einsum("bshr,rhk->bshk", o_lat, wv_b)  # [B,1,H,v]
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), cache_ckv, cache_krope
+
+
+# --------------------------------------------- paged (block-table) decode
+def paged_gather(pool: jnp.ndarray, tables: jnp.ndarray) -> jnp.ndarray:
+    """Linearize each row's blocks: pool [N(+1), bs, ...] gathered by
+    tables [B, nb] -> [B, nb*bs, ...]. Row b's logical position t lives
+    at pool[tables[b, t // bs], t % bs]; invalid table entries point at
+    the trash block and are excluded by the caller's position mask."""
+    g = pool[tables]  # [B, nb, bs, ...]
+    return g.reshape(g.shape[0], g.shape[1] * g.shape[2], *g.shape[3:])
+
+
+def _paged_write(pool, tables, pos, val):
+    """Scatter one new token per row into its block: val [B, ...] lands
+    at pool[tables[b, pos[b] // bs], pos[b] % bs]. Dead rows carry
+    all-trash tables, so their writes fall into the sentinel block."""
+    bs = pool.shape[1]
+    rows = jnp.arange(tables.shape[0])
+    bid = tables[rows, pos // bs]
+    return pool.at[bid, pos % bs].set(val)
+
+
+def gqa_decode_paged(p: Params, cfg, x, pool_k, pool_v, tables, pos):
+    """One-token GQA decode against a paged (block-pool) cache.
+
+    x: [B, 1, D]; pool_k/pool_v: [N+1, bs, Kv, hd] shared block pools
+    (last block is the write trash for dead rows); tables: [B, nb]
+    int32 per-row block tables; pos: int32 [B] absolute positions.
+
+    The new token's K/V is written to its row's tail block, then K/V is
+    gathered BY BLOCK TABLE into the row-linear layout and attention
+    runs with the same per-row position mask as the contiguous path —
+    same numerics as `gqa_decode` for any block layout
+    (tests/test_paged_kv.py). Shared (prefix-cache) blocks are full and
+    immutable, so the post-write gather can never see another row's
+    in-flight token.
+    """
+    b = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    posv = pos[:, None]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k = apply_rope(k, posv, cfg.rope_theta)
+    pool_k = _paged_write(pool_k, tables, pos, k[:, 0])
+    pool_v = _paged_write(pool_v, tables, pos, v[:, 0])
+    keys = paged_gather(pool_k, tables)  # [B, nb*bs, Kv, hd]
+    vals = paged_gather(pool_v, tables)
+    valid = jnp.arange(keys.shape[1])[None, :] <= posv
+    out = _grouped_attention(q, keys, vals, valid=valid)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), pool_k, pool_v
+
+
+def mla_decode_paged(p: Params, cfg, x, pool_ckv, pool_krope, tables, pos):
+    """Absorbed MLA decode against paged latent pools.
+
+    pool_ckv: [N+1, bs, r]; pool_krope: [N+1, bs, rope_dim]; tables:
+    [B, nb]; pos: [B]. Same math as `mla_decode` over the block-table
+    gather."""
+    m = cfg.mla
+    b = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    posv = pos[:, None]
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, posv, cfg.rope_theta)
+
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    ckv_new, krope_new = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
+    krope_new = apply_rope(krope_new[:, :, None, :], posv, cfg.rope_theta)[:, :, 0, :]
+    pool_ckv = _paged_write(pool_ckv, tables, pos, ckv_new[:, 0])
+    pool_krope = _paged_write(pool_krope, tables, pos, krope_new[:, 0])
+    cache_ckv = paged_gather(pool_ckv, tables)  # [B, nb*bs, r]
+    cache_krope = paged_gather(pool_krope, tables)
+
+    wk_b, wv_b = jnp.split(p["wkv_b"], [m.qk_nope_head_dim], axis=-1)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, wk_b)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s = (
+        jnp.einsum("bshr,btr->bhst", q_lat, cache_ckv)
+        + jnp.einsum("bshk,btk->bhst", q_rope, cache_krope)
+    ).astype(jnp.float32) * scale
+    valid = jnp.arange(cache_ckv.shape[1])[None, :] <= posv
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhst,btr->bshr", pattn, cache_ckv)
+    o = jnp.einsum("bshr,rhk->bshk", o_lat, wv_b)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), pool_ckv, pool_krope

@@ -206,6 +206,8 @@ def apply_layer(
     tiered_state: Params | None = None,
     cold_capacity_frac: float = 0.25,
     token_mask: jnp.ndarray | None = None,  # [B, S] valid-token mask
+    paged_tables: jnp.ndarray | None = None,  # [B, nb] decode block tables
+    past: Params | None = None,  # full mode: gathered prefix K/V + valid
 ):
     """Returns (x, aux_loss, expert_counts, new_cache).
 
@@ -219,6 +221,13 @@ def apply_layer(
     pad KEYS out of attention and makes the recurrent mixers carry
     state through pad steps, so the returned caches match an unpadded
     forward of each row's real prefix.
+
+    Paged KV (serving/paged_kv.py): in decode mode, `paged_tables`
+    switches attention to the block-pool cache — `cache` then carries
+    POOL leaves ([N+1, bs, ...]) for k/v/ckv/krope and per-row leaves
+    for recurrent state. In full mode, `past` carries each row's
+    gathered prefix ({"k","v","valid"} or {"ckv","krope","valid"}) for
+    suffix-only prefill; returned seq leaves are the NEW tokens' only.
     """
     mixer, ffn = sig
     e = cfg.moe.n_experts if cfg.moe is not None else 1
@@ -234,15 +243,32 @@ def apply_layer(
                 y, (k, v) = attn.gqa_forward(
                     p["mixer"], cfg, h, positions, causal=causal,
                     token_mask=fmask,
+                    past=None if past is None
+                    else (past["k"], past["v"], past["valid"]),
                 )
                 if cache is not None:
                     new_cache.update(k=k, v=v)
             else:
                 y, (ckv, krope) = attn.mla_forward(
-                    p["mixer"], cfg, h, positions, token_mask=fmask
+                    p["mixer"], cfg, h, positions, token_mask=fmask,
+                    past=None if past is None
+                    else (past["ckv"], past["krope"], past["valid"]),
                 )
                 if cache is not None:
                     new_cache.update(ckv=ckv, krope=krope)
+        elif paged_tables is not None:
+            if mixer == "attn":
+                y, pk, pv = attn.gqa_decode_paged(
+                    p["mixer"], cfg, h, cache["k"], cache["v"],
+                    paged_tables, pos,
+                )
+                new_cache.update(k=pk, v=pv)
+            else:
+                y, pc, pk = attn.mla_decode_paged(
+                    p["mixer"], cfg, h, cache["ckv"], cache["krope"],
+                    paged_tables, pos,
+                )
+                new_cache.update(ckv=pc, krope=pk)
         else:
             if mixer == "attn":
                 y, ck, cv = attn.gqa_decode(p["mixer"], cfg, h, cache["k"], cache["v"], pos)
@@ -582,3 +608,213 @@ def decode_step(
     if counts_all:
         counts = jnp.concatenate([jnp.stack(counts_all), counts], axis=0)
     return logits, cache, counts
+
+
+# ----------------------------------------------------- paged KV variants
+# Cache leaves with a sequence dimension — these live in block POOLS
+# under the paged layout; everything else (recurrent state, cross K/V)
+# stays per-slot (serving/paged_kv.py).
+SEQ_CACHE_KEYS = frozenset({"k", "v", "ckv", "krope"})
+
+
+def _scatter_suffix(pool, tables, gpos, mask, val):
+    """Scatter new-token seq entries into block pools.
+
+    pool [N+1, bs, ...]; tables [W, nb]; gpos [W, S] global positions
+    (past_len + i); mask [W, S] real tokens; val [W, S, ...]. Masked
+    positions write to the trash block (last pool row)."""
+    bs = pool.shape[1]
+    trash = pool.shape[0] - 1
+    lb = jnp.minimum(gpos // bs, tables.shape[1] - 1)
+    bid = jnp.take_along_axis(tables, lb, axis=1)  # [W, S]
+    bid = jnp.where(mask, bid, trash)
+    return pool.at[bid, gpos % bs].set(val)
+
+
+def decode_step_paged(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    pools: Params,
+    states: Params,
+    tables: jnp.ndarray,
+    pos,
+    tiered: Params | None = None,
+    cold_capacity_frac: float = 0.25,
+    token_mask: jnp.ndarray | None = None,
+):
+    """One decode step against the paged KV cache.
+
+    tokens [B,1]; `pools` holds the shared block pools (seq leaves,
+    [N+1, bs, ...]; stack leaves carry the scan-group dim first);
+    `states` the active rows' non-seq leaves ([B, ...]); tables [B, nb]
+    per-row block tables; pos [B] absolute positions. Returns
+    (logits, new_pools, new_states, expert_counts) — mirror of
+    `decode_step` with attention layers reading/writing pools by block
+    table (attn.gqa_decode_paged / attn.mla_decode_paged)."""
+    unrolled_idx, n_groups, period = stack_plan(cfg)
+    x = embed(params["embed"], tokens)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (tokens.shape[0],))
+    positions = pos[:, None]
+    tables = jnp.asarray(tables, jnp.int32)
+    tmask = None if token_mask is None else token_mask.reshape(-1, 1)
+
+    new_pools: Params = {}
+    new_states: Params = {}
+    counts_all = []
+    for li in unrolled_idx:
+        sig = layer_signature(cfg, li)
+        ts = tiered.get(f"layer{li}") if tiered else None
+        cache_l = {**pools[f"layer{li}"], **states[f"layer{li}"]}
+        x, _, counts, nc = apply_layer(
+            cfg, sig, params[f"layer{li}"], x, positions,
+            mode="decode", cache=cache_l, pos=pos, tiered_state=ts,
+            cold_capacity_frac=cold_capacity_frac, token_mask=tmask,
+            paged_tables=tables,
+        )
+        new_pools[f"layer{li}"] = {
+            k: v for k, v in nc.items() if k in SEQ_CACHE_KEYS
+        }
+        new_states[f"layer{li}"] = {
+            **states[f"layer{li}"],
+            **{k: v for k, v in nc.items() if k not in SEQ_CACHE_KEYS},
+        }
+        counts_all.append(counts)
+
+    tiered_stack = tiered.get("stack") if tiered else None
+
+    def body(carry, inp):
+        x = carry
+        p, pool_c, state_c, ts_stack = inp
+        np_, ns_ = {}, {}
+        cnts = []
+        for j, sig in enumerate(period):
+            ts = ts_stack.get(f"slot{j}") if ts_stack else None
+            cache_l = {**pool_c[f"slot{j}"], **state_c[f"slot{j}"]}
+            x, _, counts, nc = apply_layer(
+                cfg, sig, p[f"slot{j}"], x, positions,
+                mode="decode", cache=cache_l, pos=pos, tiered_state=ts,
+                cold_capacity_frac=cold_capacity_frac, token_mask=tmask,
+                paged_tables=tables,
+            )
+            np_[f"slot{j}"] = {
+                k: v for k, v in nc.items() if k in SEQ_CACHE_KEYS
+            }
+            ns_[f"slot{j}"] = {
+                **state_c[f"slot{j}"],
+                **{k: v for k, v in nc.items() if k not in SEQ_CACHE_KEYS},
+            }
+            cnts.append(counts)
+        return x, (np_, ns_, jnp.stack(cnts))
+
+    x, (stack_pools, stack_states, counts) = jax.lax.scan(
+        body, x,
+        (params["stack"], pools["stack"], states["stack"], tiered_stack or {}),
+    )
+    new_pools["stack"] = stack_pools
+    new_states["stack"] = stack_states
+    logits = _logits(params, cfg, x)[:, 0]
+    e = cfg.moe.n_experts if cfg.moe is not None else 1
+    counts = counts.reshape(-1, e)
+    if counts_all:
+        counts = jnp.concatenate([jnp.stack(counts_all), counts], axis=0)
+    return logits, new_pools, new_states, counts
+
+
+def prefill_paged(
+    params: Params,
+    cfg: ModelConfig,
+    batch: Dict[str, Any],
+    pools: Params,
+    tables: jnp.ndarray,
+    past_len: jnp.ndarray,
+    token_mask: jnp.ndarray,
+    tiered: Params | None = None,
+    cold_capacity_frac: float = 0.25,
+):
+    """Suffix-only masked prefill against the paged cache.
+
+    batch["tokens"] [W, S] carries each row's UNCACHED suffix, right-
+    padded to a bucket width and masked by `token_mask`; `past_len` [W]
+    is the prefix length already present in the cache (0 for cold
+    admissions); tables [W, nb] are the rows' block tables covering
+    prefix + suffix. Attention layers gather the prefix K/V from the
+    pools (full fixed width nb*bs, masked by past_len — one compile per
+    suffix bucket) and compute only the suffix rows; new K/V is
+    scattered into the suffix blocks. Rows with past_len > 0 require an
+    attention-only arch (recurrent state cannot be reconstructed from a
+    token-keyed prefix — serving/paged_kv.py gates this); recurrent
+    layers run the ordinary masked forward and return per-row state.
+
+    Returns (last_real_token_logits [W, V], new_pools, new_states).
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    unrolled_idx, n_groups, period = stack_plan(cfg)
+    assert cfg.encdec is None, "paged prefill does not support enc-dec"
+    x = embed(params["embed"], tokens)
+    past_len = jnp.asarray(past_len, jnp.int32)
+    tables = jnp.asarray(tables, jnp.int32)
+    positions = past_len[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    gpos = positions  # global positions of the suffix tokens
+
+    def gather_past(pool_l):
+        """Linearized per-row prefix ({k,v}|{ckv,krope} + valid) from
+        the pools; width is the full slot capacity nb*bs."""
+        out = {
+            k: attn.paged_gather(v, tables) for k, v in pool_l.items()
+        }
+        width = next(iter(out.values())).shape[1]
+        out["valid"] = jnp.arange(width)[None, :] < past_len[:, None]
+        return out
+
+    def run_layer(p, sig, x, cache_pools, ts):
+        mixer, _ = sig
+        is_attn = mixer in ("attn", "mla")
+        past = gather_past(cache_pools) if is_attn else None
+        x, _, _, nc = apply_layer(
+            cfg, sig, p, x, positions, mode="full", cache={},
+            tiered_state=ts, cold_capacity_frac=cold_capacity_frac,
+            token_mask=token_mask, past=past,
+        )
+        new_pool = {
+            k: _scatter_suffix(cache_pools[k], tables, gpos, token_mask, v)
+            for k, v in nc.items() if k in SEQ_CACHE_KEYS
+        }
+        new_state = {k: v for k, v in nc.items() if k not in SEQ_CACHE_KEYS}
+        return x, new_pool, new_state
+
+    new_pools: Params = {}
+    new_states: Params = {}
+    for li in unrolled_idx:
+        sig = layer_signature(cfg, li)
+        ts = tiered.get(f"layer{li}") if tiered else None
+        x, npool, nstate = run_layer(
+            params[f"layer{li}"], sig, x, pools[f"layer{li}"], ts
+        )
+        new_pools[f"layer{li}"] = npool
+        new_states[f"layer{li}"] = nstate
+
+    tiered_stack = tiered.get("stack") if tiered else None
+
+    def body(x, inp):
+        p, pool_c, ts_stack = inp
+        np_, ns_ = {}, {}
+        for j, sig in enumerate(period):
+            ts = ts_stack.get(f"slot{j}") if ts_stack else None
+            x, npool, nstate = run_layer(
+                p[f"slot{j}"], sig, x, pool_c[f"slot{j}"], ts
+            )
+            np_[f"slot{j}"] = npool
+            ns_[f"slot{j}"] = nstate
+        return x, (np_, ns_)
+
+    x, (stack_pools, stack_states) = jax.lax.scan(
+        body, x, (params["stack"], pools["stack"], tiered_stack or {})
+    )
+    new_pools["stack"] = stack_pools
+    new_states["stack"] = stack_states
+    last = jnp.maximum(token_mask.sum(-1).astype(jnp.int32) - 1, 0)
+    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)
+    logits = _logits(params, cfg, x_last)[:, 0]
+    return logits, new_pools, new_states

@@ -107,7 +107,10 @@ def moe_forward(
     `token_mask` [B, S] bool (bucketed masked prefill / dead decode
     slots): masked tokens are excluded from dispatch, counts, and the
     aux loss, so padding never displaces real tokens or pollutes the
-    load signal. Global path only.
+    load signal. Supported on both paths; on the grouped path masked
+    assignments take a sentinel expert id so the row-local sort parks
+    them past every real assignment (bucketed prefill under sharded
+    all-to-all dispatch).
     """
     mo = cfg.moe
     b, s, d = x.shape
@@ -118,8 +121,8 @@ def moe_forward(
         # default until the shard_map all-to-all variant lands.
         grouped = False
     if grouped:
-        assert token_mask is None, "grouped dispatch has no masked variant"
-        return _moe_forward_grouped(p, cfg, x, capacity_factor)
+        return _moe_forward_grouped(p, cfg, x, capacity_factor, full_capacity,
+                                    token_mask)
     return _moe_forward_global(p, cfg, x, capacity_factor, full_capacity,
                                token_mask)
 
@@ -189,15 +192,25 @@ def _moe_forward_global(p, cfg, x, capacity_factor, full_capacity,
     return MoEOutput(y, aux, counts)
 
 
-def _moe_forward_grouped(p, cfg, x, capacity_factor) -> MoEOutput:
+def _moe_forward_grouped(p, cfg, x, capacity_factor, full_capacity=False,
+                         token_mask=None) -> MoEOutput:
     """Per-row dispatch: [B, S, D] -> buffers [B, E, C, D] -> expert FFN
     -> combine. All sorting is row-local; sharding B over `data` and E
-    over `model` makes the dispatch one all-to-all."""
+    over `model` makes the dispatch one all-to-all.
+
+    `token_mask` [B, S]: masked assignments get the sentinel expert id
+    `e`, so the stable row-local sort parks them after every real
+    assignment — they can never claim capacity, and real tokens' ranks
+    (hence buffer slots and outputs) are identical to an unpadded
+    dispatch of the row's real prefix (tests/test_moe.py)."""
     mo = cfg.moe
     e, k = mo.n_experts, mo.top_k
     b, s, d = x.shape
-    cf = capacity_factor if capacity_factor is not None else mo.capacity_factor
-    cap = min(s, max(k, int(s * k * cf / e + 0.5)))
+    if full_capacity:
+        cap = s  # dropless: masked prefill must not tie capacity to pads
+    else:
+        cf = capacity_factor if capacity_factor is not None else mo.capacity_factor
+        cap = min(s, max(k, int(s * k * cf / e + 0.5)))
 
     # NOTE (§Perf, refuted iteration): forcing x to data-only sharding here
     # replicates activations across the model axis every MoE layer and its
@@ -210,15 +223,17 @@ def _moe_forward_grouped(p, cfg, x, capacity_factor) -> MoEOutput:
     ).reshape(b, s * k)
     a_exp = idx.reshape(b, s * k).astype(jnp.int32)
     a_w = w.reshape(b, s * k)
+    live = None if token_mask is None else jnp.repeat(token_mask, k, axis=-1)
+    a_key = a_exp if live is None else jnp.where(live, a_exp, e)
 
-    order = jnp.argsort(a_exp, axis=-1, stable=True)  # row-local sort
-    se = jnp.take_along_axis(a_exp, order, axis=-1)
+    order = jnp.argsort(a_key, axis=-1, stable=True)  # row-local sort
+    se = jnp.take_along_axis(a_key, order, axis=-1)
     st = jnp.take_along_axis(a_tok, order, axis=-1)
     sw = jnp.take_along_axis(a_w, order, axis=-1)
     pos = jnp.arange(s * k, dtype=jnp.int32)[None, :] - jax.vmap(
         lambda row: jnp.searchsorted(row, row, side="left")
     )(se).astype(jnp.int32)
-    keep = pos < cap
+    keep = (pos < cap) & (se < e)
     slot = jnp.where(keep, se * cap + pos, e * cap)  # [B, S*k]
 
     xk = jnp.take_along_axis(x, st[..., None], axis=1)  # [B, S*k, D]
@@ -253,8 +268,20 @@ def _moe_forward_grouped(p, cfg, x, capacity_factor) -> MoEOutput:
     if mo.n_shared:
         y = y + shared_ffn(p["shared"], x)
 
-    counts = jnp.zeros((e,), jnp.int32).at[a_exp.reshape(-1)].add(1)
-    frac_tokens = counts.astype(jnp.float32) / (b * s * k)
-    frac_probs = probs.reshape(-1, e).mean(0)
+    if live is None:
+        counts = jnp.zeros((e,), jnp.int32).at[a_exp.reshape(-1)].add(1)
+        frac_tokens = counts.astype(jnp.float32) / (b * s * k)
+        frac_probs = probs.reshape(-1, e).mean(0)
+    else:
+        counts = jnp.zeros((e,), jnp.int32).at[a_exp.reshape(-1)].add(
+            live.reshape(-1).astype(jnp.int32)
+        )
+        n_live = jnp.maximum(
+            token_mask.sum().astype(jnp.float32), 1.0
+        )
+        frac_tokens = counts.astype(jnp.float32) / (n_live * k)
+        frac_probs = (
+            probs.reshape(-1, e) * token_mask.reshape(-1)[:, None]
+        ).sum(0) / n_live
     aux = mo.router_aux_coef * e * jnp.sum(frac_tokens * frac_probs)
     return MoEOutput(y, aux, counts)

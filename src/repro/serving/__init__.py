@@ -14,6 +14,12 @@ from repro.serving.kv_cache import (
     scatter_slots,
 )
 from repro.serving.loop import LoopStats, ServingLoop
+from repro.serving.paged_kv import (
+    PagedKVCache,
+    RadixPrefixIndex,
+    init_paged_cache,
+    prefix_cacheable,
+)
 from repro.serving.tiered_moe import (
     TierSizes,
     apply_migrations,
@@ -28,4 +34,5 @@ __all__ = [
     "SlotKVCache", "cache_bytes", "cache_spec", "gather_slots", "reset_slots",
     "scatter_slots", "LoopStats", "ServingLoop", "TierSizes",
     "apply_migrations", "init_tiered_state", "tier_sizes", "tiered_moe_forward",
+    "PagedKVCache", "RadixPrefixIndex", "init_paged_cache", "prefix_cacheable",
 ]

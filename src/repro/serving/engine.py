@@ -25,8 +25,16 @@ from repro.core.cost_model import ExpertShape, TPUDomains
 from repro.core.predictor import EMALoadPredictor
 from repro.core.tiers import COLD, HOT, WARM, TierThresholds
 from repro.models.layers import Params
-from repro.models.model import decode_step, layer_signature, prefill, stack_plan
+from repro.models.model import (
+    decode_step,
+    decode_step_paged,
+    layer_signature,
+    prefill,
+    prefill_paged,
+    stack_plan,
+)
 from repro.serving.kv_cache import SlotKVCache, gather_slots, scatter_slots
+from repro.serving.paged_kv import PagedKVCache
 from repro.serving.tiered_moe import (
     TierSizes,
     apply_migrations,
@@ -158,7 +166,10 @@ class TriMoEServingEngine:
         assert cfg.moe is not None, "TriMoE engine requires a routed-MoE arch"
         self.cfg = cfg
         self.params = strip_expert_weights(params, cfg)
-        self.kv = cache if isinstance(cache, SlotKVCache) else SlotKVCache.from_cache(cache)
+        self.kv = (
+            cache if isinstance(cache, (SlotKVCache, PagedKVCache))
+            else SlotKVCache.from_cache(cache)
+        )
         self.tiered = tiered
         self.sizes = sizes or tier_sizes(cfg)
         self.plan_size = plan_size
@@ -201,6 +212,26 @@ class TriMoEServingEngine:
             )
 
         self._prefill_masked = jax.jit(prefill_masked, static_argnums=(4,))
+
+        # --- paged-KV variants: decode/prefill against the block pools
+        def step_paged(p, t, pools, states, tables, idx, pos, ts, live):
+            sub = gather_slots(states, idx)
+            logits, new_pools, new_sub, counts = decode_step_paged(
+                p, cfg, t, pools, sub, tables, pos, tiered=ts,
+                cold_capacity_frac=cold_capacity_frac, token_mask=live,
+            )
+            return logits, new_pools, scatter_slots(states, new_sub, idx), counts
+
+        self._step_paged = jax.jit(step_paged)
+
+        def prefill_paged_fn(p, toks, lens, past, tables, pools, ts):
+            mask = jnp.arange(toks.shape[1])[None, :] < lens[:, None]
+            return prefill_paged(
+                p, cfg, {"tokens": toks}, pools, tables, past, mask,
+                tiered=ts, cold_capacity_frac=cold_capacity_frac,
+            )
+
+        self._prefill_paged = jax.jit(prefill_paged_fn)
         self.prefill_rows = prefill_rows
         self._prefill_shapes = set()  # (rows, width) fallback compile count
         self._migrate = jax.jit(apply_migrations)
@@ -210,6 +241,10 @@ class TriMoEServingEngine:
     # source of truth; keep attribute-style access for legacy callers.
     @property
     def cache(self):
+        assert isinstance(self.kv, SlotKVCache), (
+            "raw-cache access is a SlotKVCache affordance; the paged "
+            "layout exposes kv.pools / kv.slot_state"
+        )
         return self.kv.cache
 
     @cache.setter
@@ -323,12 +358,90 @@ class TriMoEServingEngine:
             self.stats.prefill_tokens += int(lens.sum())
         return out[0] if len(out) == 1 else jnp.concatenate(out)
 
+    def step_slots_paged(self, tokens, pos, slot_indices, tables, live=None):
+        """Paged decode of the active zigzag group: recurrent state rows
+        gather/scatter by slot index as in `step_slots`, while attention
+        K/V reads and writes go through the shared block pools by each
+        row's block table (`tables` [W, nb] int32). Returns (logits,
+        expert_counts) without replanning — see `step_slots`."""
+        assert isinstance(self.kv, PagedKVCache)
+        idx = jnp.asarray(slot_indices, jnp.int32)
+        live = (
+            np.ones((len(slot_indices),), bool) if live is None
+            else np.asarray(live, bool)
+        )
+        # dead rows still write their (garbage) K/V — point them at the
+        # trash block so a just-completed slot can never corrupt its own
+        # (possibly shared / radix-indexed) blocks before recycling
+        tables = np.array(tables, np.int32, copy=True)
+        tables[~live] = self.kv.trash
+        logits, self.kv.pools, self.kv.slot_state, counts = self._step_paged(
+            self.params, jnp.asarray(tokens), self.kv.pools,
+            self.kv.slot_state, jnp.asarray(tables), idx,
+            jnp.asarray(pos, jnp.int32), self.tiered, jnp.asarray(live, bool),
+        )
+        self.stats.steps += 1
+        return logits, counts
+
+    def prefill_slots_paged(self, suffixes, slot_indices, lengths, past_len):
+        """Suffix-only masked prefill into paged slots.
+
+        suffixes: [W, S] int32 — each row's UNCACHED prompt suffix,
+        right-padded to a shared bucket width; lengths [W] real suffix
+        lengths; past_len [W] cached prefix lengths (0 = cold). The
+        rows' block tables must already cover prefix + suffix
+        (PagedKVCache.admit_slot). Rows are padded to `prefill_rows`
+        (excess chunked) so the jit compiles one (prefill_rows, width)
+        shape per bucket — the same compile bound as `prefill_slots`.
+        Returns per-row last-real-token logits [W, V].
+        """
+        assert isinstance(self.kv, PagedKVCache)
+        suffixes = np.asarray(suffixes, np.int32)
+        lengths = np.asarray(lengths, np.int32)
+        past_len = np.asarray(past_len, np.int32)
+        n, width = suffixes.shape
+        assert len(slot_indices) == n
+        assert np.all(lengths > 0) and np.all(lengths <= width)
+        r = self.prefill_rows
+        self._prefill_shapes.add((r, width))
+        out = []
+        for c0 in range(0, n, r):
+            nr = min(r, n - c0)
+            toks = np.zeros((r, width), np.int32)
+            lens = np.zeros((r,), np.int32)  # dummy rows: all-pad mask
+            past = np.zeros((r,), np.int32)
+            tables = np.full(
+                (r, self.kv.blocks_per_slot), self.kv.trash, np.int32
+            )
+            toks[:nr] = suffixes[c0:c0 + nr]
+            lens[:nr] = lengths[c0:c0 + nr]
+            past[:nr] = past_len[c0:c0 + nr]
+            tables[:nr] = self.kv.table_rows(slot_indices[c0:c0 + nr])
+            logits, self.kv.pools, row_states = self._prefill_paged(
+                self.params, jnp.asarray(toks), jnp.asarray(lens),
+                jnp.asarray(past), jnp.asarray(tables), self.kv.pools,
+                self.tiered,
+            )
+            if nr < r:  # drop the dummy rows before scattering state
+                row_states = gather_slots(row_states, list(range(nr)))
+            self.kv.slot_state = scatter_slots(
+                self.kv.slot_state, row_states, list(slot_indices[c0:c0 + nr])
+            )
+            out.append(logits[:nr])
+            self.stats.prefills += nr
+            self.stats.prefill_tokens += int(lens.sum())
+        return out[0] if len(out) == 1 else jnp.concatenate(out)
+
     @property
     def prefill_compiles(self) -> int:
-        """Distinct jit compiles of the bucketed masked prefill — the
-        quantity the CI compile-count gate bounds by len(bucket_table)."""
+        """Distinct jit compiles of the bucketed masked prefill (slot +
+        paged variants) — the quantity the CI compile-count gate bounds
+        by len(bucket_table)."""
         try:
-            return int(self._prefill_masked._cache_size())
+            return int(
+                self._prefill_masked._cache_size()
+                + self._prefill_paged._cache_size()
+            )
         except AttributeError:  # older jax: fall back to shape counting
             return len(self._prefill_shapes)
 

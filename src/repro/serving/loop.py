@@ -47,7 +47,8 @@ from repro.serving.engine import (
     init_tiered_for_model,
 )
 from repro.serving.kv_cache import SlotKVCache
-from repro.serving.tiered_moe import TierSizes
+from repro.serving.paged_kv import PagedKVCache
+from repro.serving.tiered_moe import TierSizes, tier_sizes
 
 
 @dataclasses.dataclass
@@ -103,6 +104,19 @@ class ServingLoop:
     the legacy exact-length path (one compile per distinct prompt
     length). `max_admit_wait` caps how many admit rounds a partial
     same-bucket cohort may be held back (starvation cap).
+
+    The KV store is PAGED by default (`kv_layout="paged"`,
+    serving/paged_kv.py): K/V lives in a pool of `block_size`-token
+    blocks addressed through per-slot block tables, admission claims
+    the longest radix-cached prefix of each prompt (`prefix_cache`) and
+    prefills only the uncached suffix (still bucketed + masked), decode
+    allocates blocks on demand, and eviction returns refcount-0 blocks
+    to the pool LRU-last so shared prefixes survive across requests.
+    `kv_pool_blocks` shrinks the pool below the contiguous reservation
+    (`batch_size * ceil(cache_len / block_size)`); the HBM thereby
+    reclaimed feeds `tiered_moe.tier_sizes(reclaimed_kv_bytes=...)` —
+    more hot-resident experts. `kv_layout="slots"` restores the
+    contiguous SlotKVCache.
     """
 
     def __init__(
@@ -122,15 +136,34 @@ class ServingLoop:
         bucket_table: "BucketTable | None | str" = "auto",
         prefill_rows: Optional[int] = None,
         max_admit_wait: int = 4,
+        kv_layout: str = "paged",
+        block_size: int = 4,
+        kv_pool_blocks: Optional[int] = None,
+        prefix_cache: bool = True,
     ):
         assert cfg.moe is not None, "ServingLoop drives the TriMoE MoE path"
+        assert kv_layout in ("paged", "slots"), kv_layout
+        self.cfg = cfg
+        self.paged = kv_layout == "paged"
+        if self.paged:
+            self.kv = PagedKVCache(
+                cfg, batch_size, cache_len, block_size=block_size,
+                n_blocks=kv_pool_blocks, prefix_cache=prefix_cache,
+            )
+            reclaimed = self.kv.reclaimed_bytes(cache_len)
+        else:
+            self.kv = SlotKVCache(cfg, batch_size, cache_len)
+            reclaimed = 0
         if tiered is None:
             import jax
 
-            sizes = sizes or _default_sizes(cfg)
+            if sizes is None:
+                sizes = (
+                    tier_sizes(cfg, reclaimed_kv_bytes=reclaimed)
+                    if self.paged else _default_sizes(cfg)
+                )
             tiered = init_tiered_for_model(jax.random.PRNGKey(rng_seed), cfg, sizes)
             tiered = fill_tiers_from_params(params, tiered, cfg)
-        self.cfg = cfg
         if bucket_table == "auto":
             bucket_table = BucketTable.powers_of_two(cache_len)
         self.bucket_table = bucket_table
@@ -138,7 +171,6 @@ class ServingLoop:
             batch_size, n_groups, bucket_table=bucket_table,
             max_admit_wait=max_admit_wait,
         )
-        self.kv = SlotKVCache(cfg, batch_size, cache_len)
         self.engine = TriMoEServingEngine(
             cfg, params, self.kv, tiered, sizes=sizes, plan_size=plan_size,
             thresholds=thresholds, cold_capacity_frac=cold_capacity_frac,
@@ -147,6 +179,7 @@ class ServingLoop:
         self.stats = LoopStats()
         self.completions: List[Request] = []
         self._t_admit: Dict[int, float] = {}
+        self._slot_req: Dict[int, Request] = {}  # paged: slot -> request
         self._pending_counts = None  # previous group's realized loads
 
     # ------------------------------------------------------------ intake
@@ -157,43 +190,87 @@ class ServingLoop:
         )
         self.batcher.submit(req)
 
+    def _free_slots(self, freed: List[int]) -> None:
+        """Evict finished requests' KV: paged slots index their full
+        (prompt + generated) blocks for future prefix hits before the
+        refcounts drop; contiguous slots zero their rows."""
+        if not freed:
+            return
+        if not self.paged:
+            self.kv.free(freed)
+            return
+        for i in freed:
+            r = self._slot_req.pop(i, None)
+            # index prompt + generated[:-1]: the FINAL sampled token was
+            # never fed back through decode, so its K/V does not exist —
+            # a block "completed" by it must not enter the radix
+            toks = (
+                None if r is None
+                else np.concatenate([np.asarray(r.prompt, np.int32),
+                                     np.asarray(r.generated[:-1], np.int32)])
+            )
+            self.kv.free_slot(i, tokens=toks)
+
     def _admit(self) -> None:
         freed, filled = self.batcher.admit()
         self._drain_completed()
-        if freed:
-            self.kv.free(freed)  # evict: zero the recycled cache rows
+        self._free_slots(freed)
+        past_len: Dict[int, int] = {}
         for i in filled:
-            self.kv.claim(i)
             r = self.batcher.slots[i].request
+            if self.paged:
+                # prefix-match on admission: claim the longest cached
+                # prefix, allocate fresh blocks for the uncached rest
+                past_len[i] = self.kv.admit_slot(i, r.prompt)
+                self._slot_req[i] = r
+            else:
+                self.kv.claim(i)
             self._t_admit[r.rid] = time.time()
             self.stats.admitted += 1
         if not filled:
             return
-        # prefill writes the slots' cache rows in place; the per-row
-        # logits sample the first generated token (no wasted re-decode
-        # of the last prompt token). Prompt-token accounting lives in
-        # engine.stats.prefill_tokens.
-        if self.bucket_table is None:
+        # prefill writes the slots' cache (rows or blocks) in place; the
+        # per-row logits sample the first generated token (no wasted
+        # re-decode of the last prompt token). Prompt-token accounting
+        # lives in engine.stats.prefill_tokens.
+        if not self.paged and self.bucket_table is None:
             for i in filled:  # legacy exact-length path
                 r = self.batcher.slots[i].request
                 logits = self.engine.prefill_slots(r.prompt[None, :], [i])
                 self._record_first(r, logits[0])
             return
-        # batch same-bucket admissions into one padded masked prefill
+        # batch same-bucket admissions into one padded masked prefill;
+        # under the paged layout rows are keyed by their UNCACHED suffix
+        # length — a prefix hit moves the request to a smaller bucket
         groups: Dict[int, List[int]] = {}
         for i in filled:
             r = self.batcher.slots[i].request
-            groups.setdefault(
-                self.bucket_table.bucket_of(r.prompt_len), []
-            ).append(i)
+            n_new = r.prompt_len - past_len.get(i, 0)
+            key = (
+                n_new if self.bucket_table is None
+                else self.bucket_table.bucket_of(n_new)
+            )
+            groups.setdefault(key, []).append(i)
         for width, slots in sorted(groups.items()):
             prompts = np.zeros((len(slots), width), np.int32)
             lengths = np.zeros((len(slots),), np.int32)
+            pasts = np.zeros((len(slots),), np.int32)
             for row, i in enumerate(slots):
                 r = self.batcher.slots[i].request
-                prompts[row, : r.prompt_len] = r.prompt
-                lengths[row] = r.prompt_len
-            logits = self.engine.prefill_slots(prompts, slots, lengths=lengths)
+                pasts[row] = past_len.get(i, 0)
+                suffix = r.prompt[pasts[row]:]
+                prompts[row, : len(suffix)] = suffix
+                lengths[row] = len(suffix)
+            if self.paged:
+                logits = self.engine.prefill_slots_paged(
+                    prompts, slots, lengths, pasts
+                )
+                for i in slots:
+                    # index the freshly computed prompt blocks so later
+                    # (and queued) admissions can share them
+                    self.kv.commit_prompt(i, self.batcher.slots[i].request.prompt)
+            else:
+                logits = self.engine.prefill_slots(prompts, slots, lengths=lengths)
             for row, i in enumerate(slots):
                 self._record_first(self.batcher.slots[i].request, logits[row])
 
@@ -244,7 +321,17 @@ class ServingLoop:
                 self._flush_replan()
                 continue
             _, idxs, toks, pos, live = gb
-            logits, counts = self.engine.step_slots(toks, pos, idxs, live=live)
+            if self.paged:
+                for row, i in enumerate(idxs):
+                    if live[row]:
+                        # on-demand block alloc at block boundaries,
+                        # copy-on-write if the tail block is shared
+                        self.kv.ensure_block(i, int(pos[row]))
+                logits, counts = self.engine.step_slots_paged(
+                    toks, pos, idxs, self.kv.table_rows(idxs), live=live
+                )
+            else:
+                logits, counts = self.engine.step_slots(toks, pos, idxs, live=live)
             # zigzag overlap: while this group's step runs on the device,
             # the host replans migrations from the previous group's loads
             self._flush_replan()
@@ -257,7 +344,7 @@ class ServingLoop:
         self._flush_replan()
         # recycle (but don't admit) the final wave of completions so the
         # loop can be reused for further submissions
-        self.kv.free(self.batcher.recycle())
+        self._free_slots(self.batcher.recycle())
         self._drain_completed()
         self.stats.wall_s = time.time() - t_start
         return self.completions

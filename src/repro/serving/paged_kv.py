@@ -1,0 +1,449 @@
+"""Paged KV cache with radix prefix reuse — the HBM-reclaim pillar.
+
+`SlotKVCache` reserves one contiguous max-seq strip per slot, so memory
+is committed at admission for tokens that may never be generated and
+identical prompt prefixes (system prompts, few-shot headers) are stored
+— and recomputed — once per request. This module replaces that with a
+vLLM/SGLang-style paged layout:
+
+  * K/V (and MLA latent) cache entries live in a shared POOL of
+    fixed-size token blocks ([n_blocks + 1, block_size, ...]; the last
+    block is a write trash for dead decode rows);
+  * each slot holds a BLOCK TABLE mapping logical block index ->
+    physical block id; blocks are allocated on demand as decode crosses
+    block boundaries;
+  * blocks are REFCOUNTED: a radix tree keyed on token ids indexes full
+    (immutable) blocks so a new request claims its longest cached
+    prefix without recompute, refcount-0 radix blocks are reclaimed LRU
+    when the pool runs dry, and copy-on-write protects a shared block
+    if a writer ever diverges into it;
+  * recurrent state (mamba/xlstm) and cross K/V have no sequence dim —
+    they stay per-slot in `slot_state`, and prefix reuse is gated off
+    for archs that carry them (a token-keyed prefix cannot reconstruct
+    a recurrent state).
+
+Why it matters here: the TriMoE setting is HBM-budget-driven (paper
+§3.1) — every KV byte the pool does NOT commit relative to the
+contiguous layout is handed to `tiered_moe.tier_sizes` as
+`reclaimed_kv_bytes`, buying more HBM-resident hot experts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import SEQ_CACHE_KEYS, init_cache, stack_plan, layer_signature
+from repro.serving.kv_cache import cache_bytes
+
+
+def prefix_cacheable(cfg: ModelConfig) -> bool:
+    """Prefix reuse needs every mixer's cache to be token-position
+    addressable: attention K/V and MLA latents qualify; recurrent state
+    (mamba/xlstm) and enc-dec cross K/V do not."""
+    if cfg.encdec is not None:
+        return False
+    unrolled, _, period = stack_plan(cfg)
+    sigs = [layer_signature(cfg, li) for li in unrolled] + list(period)
+    return all(mixer in ("attn", "mla") for mixer, _ in sigs)
+
+
+def _pool_axis(top_key: str) -> int:
+    """Pool/slot leaves carry the scan-group dim first under "stack"."""
+    return 1 if top_key == "stack" else 0
+
+
+def init_paged_cache(cfg: ModelConfig, n_slots: int, n_blocks: int,
+                     block_size: int):
+    """Build (pools, slot_state) for the paged layout.
+
+    pools: seq-dim cache leaves reshaped to [n_blocks + 1, block_size,
+    ...] shared pools (stack leaves: [G, n_blocks + 1, block_size, ...]);
+    slot_state: every other leaf at its usual per-slot shape. Both keep
+    the "layer<i>" / "stack" top-level convention so the engine's
+    gather/scatter helpers apply unchanged to slot_state.
+    """
+    base = init_cache(cfg, n_slots, block_size)
+
+    def split_layer(layer_cache, stacked: bool):
+        pool, state = {}, {}
+        for key, val in layer_cache.items():
+            if key in SEQ_CACHE_KEYS:
+                # [*G, n_slots, bs, ...] -> [*G, n_blocks + 1, bs, ...]
+                shape = list(val.shape)
+                shape[1 if stacked else 0] = n_blocks + 1
+                pool[key] = jnp.zeros(shape, val.dtype)
+            else:
+                # non-seq subtree (recurrent state): keep the REAL init
+                # values per slot (e.g. mlstm's m starts at -inf)
+                state[key] = val
+        return pool, state
+
+    pools: Dict = {}
+    state: Dict = {}
+    for top, sub in base.items():
+        if top == "stack":
+            pools["stack"], state["stack"] = {}, {}
+            for slot_name, layer_cache in sub.items():
+                p, s = split_layer(layer_cache, stacked=True)
+                pools["stack"][slot_name] = p
+                state["stack"][slot_name] = s
+        else:
+            pools[top], state[top] = split_layer(sub, stacked=False)
+    return pools, state
+
+
+# --------------------------------------------------------- radix index
+class _RadixNode:
+    __slots__ = ("children", "parent", "key", "block_id", "stamp")
+
+    def __init__(self, parent, key, block_id, stamp):
+        self.children: Dict[Tuple[int, ...], _RadixNode] = {}
+        self.parent = parent
+        self.key = key  # the full-block token tuple edge from parent
+        self.block_id = block_id  # None only at the root
+        self.stamp = stamp
+
+
+class RadixPrefixIndex:
+    """Radix tree over FULL blocks of token ids.
+
+    Each edge is one block's worth of token ids; each node owns the
+    physical block holding that chunk's K/V. Only full blocks are
+    indexed — they are immutable by construction (decode appends past
+    them), so shared reads can never race a write. Matching walks the
+    prompt block-by-block; insertion adopts the caller's blocks for
+    chunks the tree does not yet hold. Touch stamps power LRU eviction
+    (leaf-first: an inner block can only be reclaimed after its
+    descendants, preserving prefix contiguity)."""
+
+    def __init__(self, block_size: int):
+        self.block_size = block_size
+        self.root = _RadixNode(None, None, None, 0)
+        self._clock = 0
+        self._nodes: Dict[int, _RadixNode] = {}  # block_id -> node
+
+    def __len__(self) -> int:
+        return len(self._nodes)
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _chunks(self, tokens) -> List[Tuple[int, ...]]:
+        bs = self.block_size
+        toks = [int(t) for t in tokens]
+        return [
+            tuple(toks[i: i + bs]) for i in range(0, len(toks) - bs + 1, bs)
+        ]
+
+    def match(self, tokens) -> List[int]:
+        """Block ids of the longest indexed prefix of full blocks."""
+        node, out, stamp = self.root, [], self._tick()
+        for chunk in self._chunks(tokens):
+            nxt = node.children.get(chunk)
+            if nxt is None:
+                break
+            nxt.stamp = stamp
+            out.append(nxt.block_id)
+            node = nxt
+        # bump ancestors too, so inner nodes never look older than leaves
+        while node is not self.root:
+            node.stamp = max(node.stamp, stamp)
+            node = node.parent
+        return out
+
+    def insert(self, tokens, block_ids: Sequence[int]) -> List[int]:
+        """Index `tokens`' full blocks, adopting the caller's physical
+        blocks for chunks not yet present. Returns the ADOPTED block
+        ids (chunks already indexed keep the tree's original block; the
+        caller's duplicate stays solely refcount-owned and recycles
+        normally)."""
+        node, adopted, stamp = self.root, [], self._tick()
+        for chunk, bid in zip(self._chunks(tokens), block_ids):
+            nxt = node.children.get(chunk)
+            if nxt is None:
+                nxt = _RadixNode(node, chunk, int(bid), stamp)
+                node.children[chunk] = nxt
+                self._nodes[int(bid)] = nxt
+                adopted.append(int(bid))
+            else:
+                nxt.stamp = stamp
+            node = nxt
+        return adopted
+
+    def __contains__(self, block_id: int) -> bool:
+        return int(block_id) in self._nodes
+
+    def evict_lru(self, evictable) -> Optional[int]:
+        """Remove and return the least-recently-touched LEAF whose block
+        satisfies `evictable(block_id)` (refcount 0), or None."""
+        best = None
+        for bid, node in self._nodes.items():
+            if node.children or not evictable(bid):
+                continue
+            if best is None or node.stamp < best.stamp:
+                best = node
+        if best is None:
+            return None
+        del best.parent.children[best.key]
+        del self._nodes[best.block_id]
+        return best.block_id
+
+
+# ------------------------------------------------------------ the cache
+@dataclasses.dataclass
+class PagedStats:
+    lookups: int = 0
+    lookup_tokens: int = 0
+    hits: int = 0  # admissions with at least one cached block
+    hit_tokens: int = 0  # prompt tokens served from cache, no recompute
+    evictions: int = 0
+    cow_copies: int = 0
+    peak_blocks_in_use: int = 0  # high-water mark of live references
+
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of looked-up prompt tokens served from cache."""
+        return self.hit_tokens / max(self.lookup_tokens, 1)
+
+
+class PagedKVCache:
+    """Block-pool KV cache with per-slot block tables and radix prefix
+    reuse. Owns the device pools + per-slot state pytrees and all host
+    bookkeeping (tables, refcounts, free list, radix index).
+
+    Lifecycle per request:
+      admit_slot(slot, prompt)  -> prefix match claims cached blocks
+                                   (refcount++), fresh blocks cover the
+                                   uncached prompt suffix; returns the
+                                   cached prefix length
+      commit_prompt(slot, ...)  -> after the suffix prefill lands, the
+                                   prompt's full blocks are indexed in
+                                   the radix tree for future sharing
+      ensure_block(slot, pos)   -> decode allocates blocks on demand at
+                                   block boundaries, copy-on-write if
+                                   the target is shared
+      free_slot(slot, tokens)   -> full blocks (prompt + generated) are
+                                   indexed, refcounts drop; refcount-0
+                                   radix blocks stay reclaimable (LRU),
+                                   the rest return to the free list
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        n_slots: int,
+        cache_len: int,
+        *,
+        block_size: int = 4,
+        n_blocks: Optional[int] = None,
+        prefix_cache: bool = True,
+    ):
+        assert cfg.encdec is None, "paged KV does not support enc-dec"
+        bs = block_size
+        self.cfg = cfg
+        self.block_size = bs
+        self.n_slots = n_slots
+        self.blocks_per_slot = -(-cache_len // bs)
+        self.seq_len = self.blocks_per_slot * bs  # per-slot capacity
+        self.n_blocks = (
+            n_blocks if n_blocks is not None
+            else n_slots * self.blocks_per_slot
+        )
+        self.pools, self.slot_state = init_paged_cache(
+            cfg, n_slots, self.n_blocks, bs
+        )
+        self.trash = self.n_blocks  # sentinel physical block id
+        self.tables = np.full(
+            (n_slots, self.blocks_per_slot), self.trash, np.int32
+        )
+        self.lengths = np.zeros((n_slots,), np.int64)  # committed tokens
+        self.refcount = np.zeros((self.n_blocks,), np.int32)
+        self._free: List[int] = list(range(self.n_blocks))
+        self._slot_free: List[int] = list(range(n_slots))
+        self.radix = (
+            RadixPrefixIndex(bs)
+            if prefix_cache and prefix_cacheable(cfg) else None
+        )
+        self.stats = PagedStats()
+
+    # ------------------------------------------------------- accounting
+    @property
+    def n_free(self) -> int:
+        """Free SLOTS (SlotKVCache-compatible semantics)."""
+        return len(self._slot_free)
+
+    @property
+    def n_free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def blocks_in_use(self) -> int:
+        """Blocks referenced by at least one live slot."""
+        return int((self.refcount > 0).sum())
+
+    @property
+    def blocks_cached(self) -> int:
+        """Refcount-0 blocks kept alive by the radix index (reclaimable)."""
+        return 0 if self.radix is None else sum(
+            1 for b in self.radix._nodes if self.refcount[b] == 0
+        )
+
+    def paged_bytes(self) -> int:
+        return sum(
+            int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+            for leaf in jax.tree.leaves((self.pools, self.slot_state))
+        )
+
+    def reclaimed_bytes(self, cache_len: int) -> int:
+        """HBM the paged layout hands back vs the contiguous SlotKVCache
+        at the same slot count — the budget `tier_sizes` converts into
+        extra hot-resident experts."""
+        return max(
+            0, cache_bytes(self.cfg, self.n_slots, cache_len) - self.paged_bytes()
+        )
+
+    # ------------------------------------------------------- allocation
+    def _alloc_block(self) -> int:
+        if self._free:
+            return self._free.pop()
+        if self.radix is not None:
+            bid = self.radix.evict_lru(lambda b: self.refcount[b] == 0)
+            if bid is not None:
+                self.stats.evictions += 1
+                return bid
+        raise RuntimeError(
+            "paged KV pool exhausted: all blocks are referenced by live "
+            "slots; grow n_blocks or admit fewer concurrent requests"
+        )
+
+    def _decref(self, bid: int) -> None:
+        assert self.refcount[bid] > 0, f"double free of block {bid}"
+        self.refcount[bid] -= 1
+        if self.refcount[bid] == 0 and (
+            self.radix is None or bid not in self.radix
+        ):
+            self._free.append(bid)
+
+    # ------------------------------------------------- slot management
+    def claim(self, slot: int) -> None:
+        assert slot in self._slot_free, f"slot {slot} is not free"
+        self._slot_free.remove(slot)
+
+    def match_tokens(self, prompt) -> int:
+        """Longest reusable cached prefix of `prompt`, in tokens: full
+        blocks only, capped so at least the last prompt token is left
+        to prefill (its logits sample the first generated token)."""
+        if self.radix is None:
+            return 0
+        usable = ((len(prompt) - 1) // self.block_size) * self.block_size
+        return min(len(self.radix.match(prompt)) * self.block_size, usable)
+
+    def admit_slot(self, slot: int, prompt) -> int:
+        """Claim `slot`, reuse the longest cached prefix, and allocate
+        fresh blocks covering the uncached rest of the prompt. Returns
+        the cached prefix length (the prefill may skip that many
+        tokens)."""
+        self.claim(slot)
+        plen = len(prompt)
+        assert plen <= self.seq_len, (slot, plen, self.seq_len)
+        past = 0
+        row = self.tables[slot]
+        self.stats.lookups += 1
+        self.stats.lookup_tokens += plen
+        if self.radix is not None:
+            blocks = self.radix.match(prompt)
+            usable = ((plen - 1) // self.block_size) * self.block_size
+            past = min(len(blocks) * self.block_size, usable)
+            for lb in range(past // self.block_size):
+                row[lb] = blocks[lb]
+                self.refcount[blocks[lb]] += 1
+            if past:
+                self.stats.hits += 1
+                self.stats.hit_tokens += past
+        for lb in range(past // self.block_size, -(-plen // self.block_size)):
+            row[lb] = self._alloc_block()
+            self.refcount[row[lb]] += 1
+        self.lengths[slot] = plen
+        self.stats.peak_blocks_in_use = max(
+            self.stats.peak_blocks_in_use, self.blocks_in_use
+        )
+        return past
+
+    def commit_prompt(self, slot: int, prompt) -> None:
+        """Index the prompt's full blocks after their K/V has been
+        computed, so concurrent and future admissions can share them."""
+        if self.radix is None:
+            return
+        n_full = len(prompt) // self.block_size
+        self.radix.insert(prompt, [int(b) for b in self.tables[slot][:n_full]])
+
+    def ensure_block(self, slot: int, pos: int) -> None:
+        """Decode-time: make position `pos` writable for `slot` —
+        allocate the logical block on demand and copy-on-write if the
+        resident block is shared."""
+        lb = pos // self.block_size
+        assert lb < self.blocks_per_slot, (slot, pos, self.seq_len)
+        bid = self.tables[slot, lb]
+        if bid == self.trash:
+            nb = self._alloc_block()
+            self.tables[slot, lb] = nb
+            self.refcount[nb] += 1
+            self.stats.peak_blocks_in_use = max(
+                self.stats.peak_blocks_in_use, self.blocks_in_use
+            )
+        elif self.refcount[bid] > 1:
+            self.copy_on_write(slot, lb)
+        self.lengths[slot] = max(self.lengths[slot], pos + 1)
+
+    def copy_on_write(self, slot: int, logical_block: int) -> int:
+        """Divergence into a shared block: give `slot` a private copy of
+        the physical block so its writes never reach other readers."""
+        old = int(self.tables[slot, logical_block])
+        new = self._alloc_block()
+
+        def copy_block(leaf, ax):
+            src = leaf[old] if ax == 0 else leaf[:, old]
+            return (
+                leaf.at[new].set(src) if ax == 0 else leaf.at[:, new].set(src)
+            )
+
+        self.pools = {
+            top: jax.tree.map(
+                lambda a, ax=_pool_axis(top): copy_block(a, ax), sub
+            )
+            for top, sub in self.pools.items()
+        }
+        self.refcount[new] += 1
+        self._decref(old)
+        self.tables[slot, logical_block] = new
+        self.stats.cow_copies += 1
+        return new
+
+    def free_slot(self, slot: int, tokens=None) -> None:
+        """Evict a finished request: index its full blocks (prompt +
+        generated tokens, when given) for future prefix hits, then drop
+        the slot's references."""
+        if tokens is not None:
+            self.commit_prompt(slot, tokens)
+        for lb in range(self.blocks_per_slot):
+            bid = int(self.tables[slot, lb])
+            if bid != self.trash:
+                self._decref(bid)
+            self.tables[slot, lb] = self.trash
+        self.lengths[slot] = 0
+        self._slot_free.append(slot)
+
+    def free(self, slot_indices: Sequence[int]) -> None:
+        """SlotKVCache-compatible eviction (no token indexing)."""
+        for s in slot_indices:
+            self.free_slot(int(s))
+
+    # ---------------------------------------------------------- views
+    def table_rows(self, slot_indices) -> np.ndarray:
+        return self.tables[np.asarray(slot_indices, np.int64)]

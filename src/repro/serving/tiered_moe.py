@@ -36,17 +36,24 @@ class TierSizes(NamedTuple):
     n_cold: int
 
 
-def tier_sizes(cfg, n_chips: int = 256, hbm_budget_frac: float = 0.15) -> TierSizes:
+def tier_sizes(cfg, n_chips: int = 256, hbm_budget_frac: float = 0.15,
+               reclaimed_kv_bytes: int = 0) -> TierSizes:
     """Size the tiers so the replicated hot buffer fits its HBM budget and
     warm stays affordable when striped over the model axis; everything
     else is cold (localized). Mirrors the paper's HBM-capacity-driven hot
-    set with the DIMM pool as the elastic tail."""
+    set with the DIMM pool as the elastic tail.
+
+    `reclaimed_kv_bytes` is HBM handed back by the KV layer (the paged
+    cache's pool savings vs a contiguous per-slot reservation,
+    serving/paged_kv.py) — it joins the hot budget directly, so prefix
+    reuse translates into more HBM-resident hot experts (paper §3.1:
+    the hot set is HBM-budget-driven)."""
     from repro.hardware import TPU_V5E
 
     mo = cfg.moe
     w_bytes = 3 * cfg.d_model * mo.d_expert * 2
     n_moe_layers = max(1, sum(cfg.uses_moe_layer(i) for i in range(cfg.n_layers)))
-    budget = TPU_V5E.hbm_bytes * hbm_budget_frac
+    budget = TPU_V5E.hbm_bytes * hbm_budget_frac + max(0, reclaimed_kv_bytes)
     n_hot = max(1, min(mo.n_experts // 4, int(budget / (w_bytes * n_moe_layers))))
     n_warm = max(1, min(mo.n_experts - n_hot - 1, int(round(0.30 * mo.n_experts))))
     n_cold = mo.n_experts - n_hot - n_warm

@@ -34,6 +34,32 @@ def test_grouped_dispatch_equals_global(setup):
     )
 
 
+def test_grouped_masked_dispatch_matches_unpadded(setup):
+    """Satellite of the paged-KV PR (ROADMAP item): the grouped
+    (per-row) dispatch now supports token_mask, so bucketed prefill can
+    run under sharded all-to-all dispatch. Right-padding rows and
+    masking must reproduce each row's unpadded dispatch exactly —
+    outputs, counts, and aux loss (masked assignments take a sentinel
+    expert id and sort past every real one)."""
+    cfg, p, x = setup
+    b, s_pad = x.shape[0], x.shape[1]
+    lens = [5, 16, 9]
+    mask = jnp.arange(s_pad)[None, :] < jnp.asarray(lens)[:, None]
+    padded = moe_forward(p, cfg, x, grouped=True, full_capacity=True,
+                         token_mask=mask)
+    counts = np.zeros_like(np.asarray(padded.expert_counts))
+    for i, ln in enumerate(lens):
+        solo = moe_forward(p, cfg, x[i:i + 1, :ln], grouped=True,
+                           full_capacity=True)
+        np.testing.assert_allclose(
+            np.asarray(padded.y[i, :ln], np.float32),
+            np.asarray(solo.y[0], np.float32), atol=2e-2,
+        )
+        counts += np.asarray(solo.expert_counts)
+    np.testing.assert_array_equal(np.asarray(padded.expert_counts), counts)
+    assert int(padded.expert_counts.sum()) == sum(lens) * cfg.moe.top_k
+
+
 def test_counts_conserved(setup):
     cfg, p, x = setup
     t = x.shape[0] * x.shape[1]

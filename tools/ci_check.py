@@ -7,7 +7,10 @@ one pytest node id per line, '#' comments allowed). CI fails on:
   * a baseline entry that now PASSES (stale baseline — the ratchet:
     fixes must be banked by trimming the baseline, or they can silently
     regress later),
-  * --min-passed N given and fewer than N tests passed (full-tier runs).
+  * --min-passed N given and fewer than N tests passed (full-tier runs),
+  * tracked Python bytecode (__pycache__ / *.pyc) in the git index —
+    build artifacts must never be committed (they were once, by
+    accident; .gitignore plus this gate keeps them out).
 
 Baseline entries that still fail never block. Entries absent from the
 report (e.g. @slow tests deselected in the fast tier) are ignored.
@@ -35,8 +38,24 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import subprocess
 import sys
 import xml.etree.ElementTree as ET
+
+
+def tracked_bytecode() -> list:
+    """Tracked __pycache__/*.pyc paths (empty when clean or when git is
+    unavailable — e.g. running from an exported tarball)."""
+    try:
+        out = subprocess.run(
+            ["git", "ls-files"], capture_output=True, text=True, check=True
+        ).stdout
+    except (OSError, subprocess.CalledProcessError):
+        return []
+    return [
+        p for p in out.splitlines()
+        if "__pycache__" in p or p.endswith((".pyc", ".pyo"))
+    ]
 
 
 def node_id(case: ET.Element) -> str:
@@ -123,6 +142,15 @@ def main(argv=None) -> int:
     if args.min_passed and len(passed) < args.min_passed:
         print(f"[ci_check] FAIL: only {len(passed)} passed "
               f"< required floor {args.min_passed}")
+        rc = 1
+    tracked = tracked_bytecode()
+    if tracked:
+        print(f"[ci_check] FAIL: {len(tracked)} tracked bytecode path(s) — "
+              f"git rm --cached them (they are .gitignore'd):")
+        for p in tracked[:10]:
+            print(f"  tracked: {p}")
+        if len(tracked) > 10:
+            print(f"  ... and {len(tracked) - 10} more")
         rc = 1
     if rc == 0:
         print("[ci_check] OK: no regressions vs seed baseline")
