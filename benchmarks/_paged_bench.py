@@ -1,0 +1,65 @@
+"""Shared synthetic harness for the paged decode-attention benches.
+
+`kernel_bench.bench_paged_attention` (fixed long-context geometry) and
+`serving_bench.bench_decode_attention` (the serve's arch geometry) must
+measure the SAME thing — dense gather over the full block-table width
+vs the pow2-bucketed active width the engine slices to — with the same
+timing protocol, or their speedup numbers silently diverge. Both build
+their case and time it through here.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.paged_attention import (
+    active_block_width,
+    paged_decode_gqa_ref,
+)
+
+
+def build_case(rng, *, b, kv, g, hd, bs, nb, pos):
+    """Random pools (+ trash block), injective tables, and queries at a
+    GQA decode geometry. `pos` is a length-b sequence of row end
+    positions."""
+    n_blocks = b * nb
+    q = jnp.asarray(rng.standard_normal((b, kv, g, hd)), jnp.float32)
+    pool_k = jnp.asarray(
+        rng.standard_normal((n_blocks + 1, bs, kv, hd)) * 0.1, jnp.float32
+    )
+    pool_v = jnp.asarray(
+        rng.standard_normal((n_blocks + 1, bs, kv, hd)) * 0.1, jnp.float32
+    )
+    tables = jnp.asarray(
+        rng.permutation(n_blocks).reshape(b, nb).astype(np.int32)
+    )
+    return q, pool_k, pool_v, tables, jnp.asarray(pos, jnp.int32)
+
+
+def time_ref(q, pool_k, pool_v, tables, pos, *, iters=10, repeats=3):
+    """Best-of-`repeats` mean microseconds per jitted dense-gather ref
+    call at `tables`' width (best-of against scheduler noise)."""
+    fn = jax.jit(paged_decode_gqa_ref)
+    for _ in range(2):  # compile + settle allocator/caches
+        jax.block_until_ready(fn(q, pool_k, pool_v, tables, pos))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(q, pool_k, pool_v, tables, pos)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / iters * 1e6)
+    return best
+
+
+def time_full_vs_sparse(q, pool_k, pool_v, tables, pos):
+    """(full_us, sparse_us, active_w): full-width gather vs the pow2
+    active-width slice — exactly engine.step_slots_paged's slicing."""
+    bs, nb = pool_k.shape[1], tables.shape[1]
+    w = active_block_width(int(jnp.max(pos)), bs, nb)
+    full_us = time_ref(q, pool_k, pool_v, tables, pos)
+    sparse_us = time_ref(q, pool_k, pool_v, tables[:, :w], pos)
+    return full_us, sparse_us, w

@@ -19,6 +19,10 @@ from repro.hardware import TPU_V5E
 from repro.kernels.expert_gemv import cold_expert_ffn
 from repro.kernels.flash_attention import mha
 from repro.kernels.moe_gemm import grouped_expert_matmul
+from repro.kernels.paged_attention import (
+    paged_decode_gqa,
+    paged_decode_gqa_ref,
+)
 
 
 def _time(fn, *args, iters=3):
@@ -78,6 +82,39 @@ def bench_flash_attention():
     print(f"kernel/flash_attention,{us_ref:.1f},err={err:.1e} tpu_roofline_us={tpu_us:.2f}")
 
 
+def bench_paged_attention():
+    """Paged decode attention: dense gather over the FULL block-table
+    width (the pre-kernel serving path) vs the block-sparse active-width
+    walk (what the engine slices to + what the Pallas kernel does per
+    row). Rows are short relative to the slot capacity — the
+    long-context serving shape the kernel exists for."""
+    try:
+        from benchmarks._paged_bench import build_case, time_full_vs_sparse
+    except ImportError:  # script mode: benchmarks/ itself is on sys.path
+        from _paged_bench import build_case, time_full_vs_sparse
+
+    rng = np.random.default_rng(3)
+    b, kv, g, hd, bs, nb = 4, 4, 1, 64, 16, 64  # 1024-token slots
+    q, pool_k, pool_v, tables, pos = build_case(
+        rng, b=b, kv=kv, g=g, hd=hd, bs=bs, nb=nb,
+        pos=[37, 91, 13, 55],  # rows ~4-9% full
+    )
+    us_full, us_sparse, w = time_full_vs_sparse(q, pool_k, pool_v, tables, pos)
+    got = paged_decode_gqa(q, pool_k, pool_v, tables[:, :w], pos,
+                           interpret=True)
+    ref = paged_decode_gqa_ref(q, pool_k, pool_v, tables[:, :w], pos)
+    err = float(jnp.max(jnp.abs(got - ref)))
+    # the dense path moves nb/w x the K/V bytes per step
+    bytes_full = 2 * b * nb * bs * kv * hd * 4
+    bytes_sparse = 2 * b * w * bs * kv * hd * 4
+    tpu_full = bytes_full / TPU_V5E.hbm_bw * 1e6  # decode attn is BW-bound
+    tpu_sparse = bytes_sparse / TPU_V5E.hbm_bw * 1e6
+    print(f"kernel/paged_attention,{us_sparse:.1f},err={err:.1e} "
+          f"dense_gather_us={us_full:.1f} speedup={us_full / us_sparse:.2f}x "
+          f"active_blocks={w}/{nb} "
+          f"tpu_bw_bound_us={tpu_sparse:.2f} (dense {tpu_full:.2f})")
+
+
 def bench_scheduler_latency():
     """The online scheduler must cost << one decode step (paper §4.2)."""
     from repro.core.cost_model import CostModel, ExpertShape
@@ -104,4 +141,5 @@ def run_all():
     bench_moe_gemm()
     bench_expert_gemv()
     bench_flash_attention()
+    bench_paged_attention()
     bench_scheduler_latency()

@@ -207,6 +207,36 @@ def run_mixed(args) -> int:
 
 
 # --------------------------------------------------- shared-prefix mode
+def bench_decode_attention(loop, row_len: int, long_ctx: int = 1024):
+    """Time one paged GQA decode-attention read at the serve's head
+    geometry and block size, in a LONG-CONTEXT slot (`long_ctx` tokens
+    of capacity — the shape the block-sparse path exists for) with rows
+    at the serve's actual end-of-request length: dense gather over the
+    FULL block-table width (what every pre-PR-4 decode step paid) vs
+    the pow2-bucketed ACTIVE width the engine now slices to. Case
+    construction and timing protocol are shared with
+    kernel_bench.bench_paged_attention (_paged_bench). Returns
+    (full_us, sparse_us, active_w, full_w)."""
+    import numpy as np
+
+    try:
+        from benchmarks._paged_bench import build_case, time_full_vs_sparse
+    except ImportError:  # script mode: benchmarks/ itself is on sys.path
+        from _paged_bench import build_case, time_full_vs_sparse
+
+    cfg = loop.cfg
+    bs = loop.kv.block_size
+    b = min(4, loop.kv.n_slots)
+    nb = max(loop.kv.blocks_per_slot, -(-long_ctx // bs))
+    q, pool_k, pool_v, tables, pos = build_case(
+        np.random.default_rng(0), b=b, kv=cfg.n_kv_heads,
+        g=cfg.n_heads // cfg.n_kv_heads, hd=cfg.resolved_head_dim,
+        bs=bs, nb=nb, pos=[min(row_len, nb * bs) - 1] * b,
+    )
+    full_us, sparse_us, w = time_full_vs_sparse(q, pool_k, pool_v, tables, pos)
+    return full_us, sparse_us, w, nb
+
+
 def run_prefix(args) -> int:
     """Shared-system-prompt replay: every request is `--prefix-len`
     shared tokens + a short unique suffix. Served twice through the
@@ -222,7 +252,9 @@ def run_prefix(args) -> int:
 
     # smoke tier: prompt-heavy replay (one sampled token per request —
     # the summarize/classify pattern) so the measured ratio is the
-    # prompt-processing saving, not smoke-scale decode dispatch overhead
+    # prompt-processing saving, not smoke-scale decode dispatch
+    # overhead; a separate UNTIMED decode probe below still drives the
+    # sliced paged decode path in the gated run
     new_tokens = 1 if args.smoke else args.new_tokens
     n_requests = 12 if args.smoke else args.requests
     shared = np.random.default_rng(5).integers(
@@ -253,20 +285,55 @@ def run_prefix(args) -> int:
         for r in make_reqs(1):
             loop.submit(r)
         loop.run()  # warmup: compile + (reuse) seed the radix
-        loop.stats = LoopStats()
         loop.kv.stats = PagedStats()
-        for r in make_reqs(2):
-            loop.submit(r)
-        loop.run()
-        return loop, loop.stats.completed  # timed-pass completions only
+        # best-of-N timed replays (fresh suffixes per pass): the smoke
+        # replay's timed region is tens of ms, so a single pass is at
+        # the mercy of scheduler noise — the best pass is the
+        # steady-state number the gates compare
+        best, done = None, 0
+        for rep in range(max(1, args.bench_repeats)):
+            loop.stats = LoopStats()
+            for r in make_reqs(2 + rep):
+                loop.submit(r)
+            loop.run()
+            done = loop.stats.completed
+            if best is None or loop.stats.tokens_per_s > best.tokens_per_s:
+                best = loop.stats
+        loop.stats = best
+        return loop, done  # per-pass completions (kv.stats spans passes)
 
     with CompileCounter() as cc:
         reuse, done_r = serve(True)
         noreuse, done_n = serve(False)
     kv = reuse.kv
+    # decode probe (untimed): the prompt-heavy replay samples its one
+    # token from prefill logits, so drive a few multi-token requests
+    # through the reuse loop to exercise the sliced paged decode path
+    # the bench reports on (decode_table_widths) without polluting the
+    # timed stats
+    timed_stats, timed_kv_stats = reuse.stats, kv.stats
+    reuse.stats, kv.stats = LoopStats(), PagedStats()
+    probe_rng = np.random.default_rng(7)
+    probe_plen = max(4, args.prefix_len // 2)
+    for i in range(args.prefix_batch):
+        reuse.submit(Request(
+            rid=10_000 + i,
+            prompt=np.concatenate([
+                shared[:probe_plen],
+                probe_rng.integers(0, cfg.vocab_size, args.suffix_len)
+                .astype(np.int32),
+            ]),
+            max_new_tokens=4,
+        ))
+    reuse.run()
+    reuse.stats, kv.stats = timed_stats, timed_kv_stats
     speedup = reuse.stats.tokens_per_s / max(noreuse.stats.tokens_per_s, 1e-9)
     compiles = reuse.engine.prefill_compiles
     table = reuse.bucket_table
+    attn_full_us, attn_sparse_us, act_w, full_w = bench_decode_attention(
+        reuse, args.prefix_len + args.suffix_len + new_tokens
+    )
+    attn_speedup = attn_full_us / max(attn_sparse_us, 1e-9)
     print(f"[serving_bench] prefix replay: {n_requests} requests = "
           f"{args.prefix_len} shared + {args.suffix_len} unique tokens, "
           f"{new_tokens} new each")
@@ -280,6 +347,11 @@ def run_prefix(args) -> int:
     print(f"[serving_bench] prefill compiles: {compiles} "
           f"(bucket-table bound: {len(table)}); "
           f"total backend compiles: {cc.count}")
+    print(f"[serving_bench] decode attention: block-sparse "
+          f"{attn_sparse_us:.0f}us ({act_w}/{full_w} blocks) vs dense "
+          f"gather {attn_full_us:.0f}us = {attn_speedup:.2f}x; "
+          f"decode table widths used: "
+          f"{sorted(reuse.engine.decode_table_widths)}")
 
     result = {
         "arch": cfg.name,
@@ -296,11 +368,22 @@ def run_prefix(args) -> int:
         "speedup": round(speedup, 2),
         "prefix_hit_rate": round(kv.stats.hit_rate, 3),
         "hit_tokens": kv.stats.hit_tokens,
+        "dedup_blocks": kv.stats.dedup_blocks,
         "peak_blocks_in_use": kv.stats.peak_blocks_in_use,
         "blocks_cached": kv.blocks_cached,
         "prefill_compiles": compiles,
         "backend_compiles": cc.count,
+        "decode_attn_dense_us": round(attn_full_us, 1),
+        "decode_attn_sparse_us": round(attn_sparse_us, 1),
+        "decode_attn_speedup": round(attn_speedup, 2),
+        "decode_active_blocks": act_w,
+        "decode_total_blocks": full_w,
+        "decode_table_widths": sorted(reuse.engine.decode_table_widths),
     }
+    # snapshot the committed baseline BEFORE (possibly) overwriting it
+    baseline = (
+        _baseline_prefix(args.baseline_json) if args.baseline_json else None
+    )
     if args.json:
         write_json(args.json, "prefix", result)
 
@@ -321,7 +404,57 @@ def run_prefix(args) -> int:
         print(f"[serving_bench] FAIL: {compiles} distinct prefill compiles "
               f"exceed the bucket-table size {len(table)}")
         rc = 1
+    if not reuse.engine.decode_table_widths:
+        print("[serving_bench] FAIL: the decode probe never reached "
+              "step_slots_paged (sliced paged decode did not run)")
+        rc = 1
+    if args.baseline_json:
+        if baseline is None:
+            print(f"[serving_bench] note: no prefix baseline in "
+                  f"{args.baseline_json}; gate skipped")
+        else:
+            # primary gate is MACHINE-RELATIVE: the reuse-over-no-reuse
+            # ratio measured in this very run must hold the committed
+            # level (absolute tokens/s varies >2x across runners)
+            base_speedup = baseline.get("speedup")
+            if base_speedup is not None:
+                floor = args.baseline_frac * float(base_speedup)
+                ok = speedup >= floor
+                print(f"[serving_bench] {'ok' if ok else 'FAIL'}: reuse "
+                      f"speedup {speedup:.2f}x vs baseline "
+                      f"{float(base_speedup):.2f}x (floor {floor:.2f}x = "
+                      f"{args.baseline_frac}x)")
+                rc = rc if ok else 1
+            # secondary: absolute tokens/s catastrophe floor (loose, to
+            # absorb runner-to-runner variance)
+            base_tps = baseline.get("tokens_per_s")
+            if base_tps is not None:
+                floor = args.baseline_abs_frac * float(base_tps)
+                ok = reuse.stats.tokens_per_s >= floor
+                print(f"[serving_bench] {'ok' if ok else 'FAIL'}: reuse "
+                      f"tokens/s {reuse.stats.tokens_per_s:.1f} vs "
+                      f"baseline {float(base_tps):.1f} (floor {floor:.1f} "
+                      f"= {args.baseline_abs_frac}x)")
+                rc = rc if ok else 1
     return rc
+
+
+def _baseline_prefix(path):
+    """The committed prefix-mode result dict (BENCH_serving.json), or
+    None when the file/section is missing, unreadable, or carries no
+    gateable metrics (so the caller prints its 'gate skipped' note
+    instead of silently passing)."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return None
+    entry = data.get("prefix", data)
+    if not isinstance(entry, dict):
+        return None
+    if entry.get("speedup") is None and entry.get("tokens_per_s") is None:
+        return None
+    return entry
 
 
 def run_grid(args) -> int:
@@ -404,6 +537,19 @@ def main(argv=None):
     ap.add_argument("--min-speedup", type=float, default=1.3,
                     help="required tokens/s ratio of prefix reuse over "
                          "no-reuse (acceptance: >= 1.3)")
+    ap.add_argument("--baseline-json", default=None,
+                    help="committed BENCH_serving.json to gate --prefix "
+                         "against (the nightly regression gate)")
+    ap.add_argument("--baseline-frac", type=float, default=0.8,
+                    help="required fraction of the baseline reuse SPEEDUP "
+                         "(machine-relative primary gate)")
+    ap.add_argument("--baseline-abs-frac", type=float, default=0.5,
+                    help="required fraction of the baseline tokens/s "
+                         "(loose absolute catastrophe floor; runner "
+                         "throughput varies across machines)")
+    ap.add_argument("--bench-repeats", type=int, default=3,
+                    help="--prefix timed replays per config; best pass "
+                         "is reported (noise floor for the gates)")
     args = ap.parse_args(argv)
 
     if args.mixed:

@@ -92,6 +92,11 @@ class ModelConfig:
     compute_dtype: str = "bfloat16"
     # attention contract: can this arch serve 500k+ contexts?
     subquadratic: bool = False
+    # paged decode-attention backend (serving, kernels/paged_attention):
+    # "auto" = Pallas kernel on TPU / jnp dense-gather ref on CPU;
+    # "pallas" forces the kernel (interpret mode off-TPU); "ref" forces
+    # the dense-gather path.
+    paged_attn_backend: str = "auto"
 
     # ------------------------------------------------------------------
     @property

@@ -1,0 +1,21 @@
+from repro.kernels.paged_attention.ops import (
+    active_block_width,
+    resolve_backend,
+)
+from repro.kernels.paged_attention.paged_attention import (
+    paged_decode_gqa,
+    paged_decode_mla,
+)
+from repro.kernels.paged_attention.ref import (
+    paged_decode_gqa_ref,
+    paged_decode_mla_ref,
+)
+
+__all__ = [
+    "resolve_backend",
+    "active_block_width",
+    "paged_decode_gqa",
+    "paged_decode_mla",
+    "paged_decode_gqa_ref",
+    "paged_decode_mla_ref",
+]

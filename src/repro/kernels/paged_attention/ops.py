@@ -1,0 +1,56 @@
+"""Backend dispatch for paged decode attention.
+
+`resolve_backend` maps the config-level choice ("auto" | "pallas" |
+"ref") to a concrete (backend, interpret) pair: the Pallas kernel runs
+natively on TPU and in interpret mode everywhere else (CPU CI still
+exercises the kernel path), "auto" picks the kernel on TPU and the jnp
+dense-gather reference off-TPU (interpret mode is far slower than XLA's
+fused gather on CPU, so it is opt-in there).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.kernels.paged_attention.paged_attention import (
+    paged_decode_gqa,
+    paged_decode_mla,
+)
+from repro.kernels.paged_attention.ref import (
+    paged_decode_gqa_ref,
+    paged_decode_mla_ref,
+)
+
+__all__ = [
+    "resolve_backend",
+    "active_block_width",
+    "paged_decode_gqa",
+    "paged_decode_mla",
+    "paged_decode_gqa_ref",
+    "paged_decode_mla_ref",
+]
+
+
+def active_block_width(max_pos: int, block_size: int, max_blocks: int) -> int:
+    """Block-table columns decode actually needs for rows ending at
+    `max_pos`: ceil((max_pos + 1) / block_size), rounded up to a power
+    of two (compile reuse — at most log2(max_blocks) distinct widths),
+    capped at the full table width. The single source of truth for the
+    engine's table slicing AND the benches that measure it."""
+    need = max(1, (int(max_pos) + block_size) // block_size)
+    width = 1
+    while width < need:
+        width *= 2
+    return min(width, max_blocks)
+
+
+def resolve_backend(choice: str) -> Tuple[str, bool]:
+    """(backend, interpret) for a config-level backend choice."""
+    on_tpu = jax.default_backend() == "tpu"
+    if choice == "auto":
+        return ("pallas", False) if on_tpu else ("ref", False)
+    if choice == "pallas":
+        return "pallas", not on_tpu
+    assert choice == "ref", f"unknown paged_attn_backend {choice!r}"
+    return "ref", False

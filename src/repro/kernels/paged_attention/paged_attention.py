@@ -1,0 +1,216 @@
+"""Block-sparse paged-attention decode Pallas TPU kernels.
+
+The serving decode path stores K/V in a shared pool of fixed-size token
+blocks addressed through per-slot block tables (serving/paged_kv.py).
+The jnp reference path linearizes each row's FULL table
+(`blocks_per_slot * block_size` positions) before attending, so every
+decode step pays O(max_ctx) HBM traffic per token regardless of the
+row's actual length — exactly the GPU I/O penalty TriMoE's tiering is
+built to hide.
+
+These kernels instead WALK the block table: grid dimension `j` iterates
+logical blocks, a scalar-prefetch copy of the table steers each step's
+pool DMA to the row's physical block, and `pl.when(j * bs <= pos[b])`
+skips every block past the row's length, carrying a flash-style online
+softmax (running max / denominator / fp32 accumulator) across the
+blocks that do run. Dead decode rows follow the trash-block contract:
+their tables point every logical block at the sentinel trash block, the
+kernel attends over its (finite) garbage, and the caller discards the
+output — no special-casing, no NaNs (block 0 always runs, so the
+denominator never collapses).
+
+Two variants:
+  * GQA — pools [N+1, bs, Kv, hd]; queries grouped per KV head so the
+    MQA/GQA head-sharing reads each K/V block once per kv head;
+  * MLA — absorbed decode over the (ckv, krope) latent pool layout;
+    scores are q_lat . ckv + q_rope . krope and the output is the
+    latent-space attention read (o_lat), with the wv_b expansion left
+    to the caller (models/attention.py) exactly as in `mla_decode`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import CompilerParams
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------- GQA
+def _gqa_kernel(tables_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                m_ref, l_ref, acc_ref, *, bs):
+    del tables_ref  # consumed by the BlockSpec index maps only
+    b, j = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[b]
+
+    # block-sparse walk: blocks wholly past the row's length never run
+    @pl.when(j * bs <= pos)
+    def _block():
+        q = q_ref[0, 0]        # [G, hd]
+        k = k_ref[0, :, 0, :]  # [bs, hd]
+        v = v_ref[0, :, 0, :]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        s *= q.shape[-1] ** -0.5
+        kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos <= pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_gqa(
+    q: jnp.ndarray,        # [B, Kv, G, hd] one query token per row
+    pool_k: jnp.ndarray,   # [N+1, bs, Kv, hd] (last block = write trash)
+    pool_v: jnp.ndarray,   # [N+1, bs, Kv, hd]
+    tables: jnp.ndarray,   # [B, nb] int32 physical block per logical block
+    pos: jnp.ndarray,      # [B] int32 absolute position of the new token
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, kv, g, hd = q.shape
+    bs = pool_k.shape[1]
+    nb = tables.shape[1]
+    kern = functools.partial(_gqa_kernel, bs=bs)
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, kv, nb),
+            in_specs=[
+                pl.BlockSpec((1, 1, g, hd), lambda bi, h, j, t, p: (bi, h, 0, 0)),
+                pl.BlockSpec(
+                    (1, bs, 1, hd), lambda bi, h, j, t, p: (t[bi, j], 0, h, 0)
+                ),
+                pl.BlockSpec(
+                    (1, bs, 1, hd), lambda bi, h, j, t, p: (t[bi, j], 0, h, 0)
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, g, hd), lambda bi, h, j, t, p: (bi, h, 0, 0)
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(jnp.asarray(tables, jnp.int32), jnp.asarray(pos, jnp.int32),
+      q, pool_k, pool_v)
+
+
+# ------------------------------------------------------------------- MLA
+def _mla_kernel(tables_ref, pos_ref, ql_ref, qr_ref, ckv_ref, kr_ref,
+                o_ref, m_ref, l_ref, acc_ref, *, bs, scale):
+    del tables_ref
+    b, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[b]
+
+    @pl.when(j * bs <= pos)
+    def _block():
+        ql = ql_ref[0]      # [H, r]
+        qr = qr_ref[0]      # [H, rd]
+        ckv = ckv_ref[0]    # [bs, r]
+        kr = kr_ref[0]      # [bs, rd]
+        s = (
+            jnp.dot(ql, ckv.T, preferred_element_type=jnp.float32)
+            + jnp.dot(qr, kr.T, preferred_element_type=jnp.float32)
+        ) * scale
+        kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos <= pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+        # value read stays in latent space (absorbed formulation)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, ckv.astype(jnp.float32), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _done():
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_decode_mla(
+    q_lat: jnp.ndarray,      # [B, H, r] absorbed (W_k^nope-folded) queries
+    q_rope: jnp.ndarray,     # [B, H, rd]
+    pool_ckv: jnp.ndarray,   # [N+1, bs, r]
+    pool_krope: jnp.ndarray,  # [N+1, bs, rd]
+    tables: jnp.ndarray,     # [B, nb]
+    pos: jnp.ndarray,        # [B]
+    *,
+    scale: float,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, h, r = q_lat.shape
+    rd = q_rope.shape[-1]
+    bs = pool_ckv.shape[1]
+    nb = tables.shape[1]
+    kern = functools.partial(_mla_kernel, bs=bs, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, nb),
+            in_specs=[
+                pl.BlockSpec((1, h, r), lambda bi, j, t, p: (bi, 0, 0)),
+                pl.BlockSpec((1, h, rd), lambda bi, j, t, p: (bi, 0, 0)),
+                pl.BlockSpec((1, bs, r), lambda bi, j, t, p: (t[bi, j], 0, 0)),
+                pl.BlockSpec((1, bs, rd), lambda bi, j, t, p: (t[bi, j], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, h, r), lambda bi, j, t, p: (bi, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((h, 1), jnp.float32),
+                pltpu.VMEM((h, 1), jnp.float32),
+                pltpu.VMEM((h, r), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, r), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(jnp.asarray(tables, jnp.int32), jnp.asarray(pos, jnp.int32),
+      q_lat, q_rope, pool_ckv, pool_krope)

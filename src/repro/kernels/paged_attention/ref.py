@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the paged decode-attention kernels.
+
+Dense-gather semantics: linearize each row's blocks by table, mask
+positions past the row's length, exact softmax. These are both the
+numerics oracle for the Pallas kernels (tests/test_paged_attention_
+kernel.py) and the O(max_ctx) baseline the block-sparse kernel is
+benchmarked against (benchmarks/kernel_bench.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def linearize_blocks(pool: jnp.ndarray, tables: jnp.ndarray) -> jnp.ndarray:
+    """pool [N+1, bs, ...] gathered by tables [B, nb] -> [B, nb*bs, ...].
+    Row b's logical position t lives at pool[tables[b, t // bs], t % bs].
+    The single block-table linearization contract — models/attention.py's
+    `paged_gather` delegates here."""
+    g = pool[tables]
+    return g.reshape(g.shape[0], g.shape[1] * g.shape[2], *g.shape[3:])
+
+
+def paged_decode_gqa_ref(q, pool_k, pool_v, tables, pos):
+    """q: [B, Kv, G, hd]; pools [N+1, bs, Kv, hd]; tables [B, nb];
+    pos [B] -> [B, Kv, G, hd]."""
+    keys = linearize_blocks(pool_k, tables)   # [B, S, Kv, hd]
+    vals = linearize_blocks(pool_v, tables)
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bkgd,bskd->bkgs", q, keys).astype(jnp.float32) * scale
+    valid = jnp.arange(keys.shape[1])[None, :] <= pos[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgs,bskd->bkgd", p.astype(vals.dtype), vals)
+
+
+def paged_decode_mla_ref(q_lat, q_rope, pool_ckv, pool_krope, tables, pos,
+                         *, scale):
+    """q_lat: [B, H, r]; q_rope: [B, H, rd]; latent pools [N+1, bs, r|rd];
+    tables [B, nb]; pos [B] -> o_lat [B, H, r] (fp32)."""
+    ckv = linearize_blocks(pool_ckv, tables)      # [B, S, r]
+    krope = linearize_blocks(pool_krope, tables)  # [B, S, rd]
+    s = (
+        jnp.einsum("bhr,btr->bht", q_lat, ckv,
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bhr,btr->bht", q_rope, krope,
+                     preferred_element_type=jnp.float32)
+    ) * scale
+    valid = jnp.arange(ckv.shape[1])[None, :] <= pos[:, None]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bht,btr->bhr", p, ckv.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)

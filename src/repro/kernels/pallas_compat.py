@@ -1,0 +1,17 @@
+"""Version portability for the Pallas TPU API surface the kernels use.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``
+(and may again); every kernel package resolves the name through here so
+a jax upgrade/downgrade is a one-line fix instead of a kernel sweep.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+assert CompilerParams is not None, (
+    "neither pltpu.CompilerParams nor pltpu.TPUCompilerParams exists in "
+    "this jax; update repro.kernels.pallas_compat for the new name"
+)

@@ -339,6 +339,12 @@ def mla_decode(p: Params, cfg, x, cache_ckv, cache_krope, pos):
 
     cache_ckv: [B, S, r]; cache_krope: [B, S, rope_dim]; pos: int32
     scalar or [B] per-row absolute positions (continuous batching).
+
+    The absorbed matmuls accumulate in fp32: folding W_k^nope into q
+    makes every score a ~kv_lora_rank-wide latent contraction, and a
+    bf16 accumulation there drifts decode measurably away from the
+    expanded prefill/train path (the deepseek seed failure in
+    tests/test_models.py).
     """
     m = cfg.mla
     s_max = cache_ckv.shape[1]
@@ -360,28 +366,44 @@ def mla_decode(p: Params, cfg, x, cache_ckv, cache_krope, pos):
 
     wk_b, wv_b = jnp.split(p["wkv_b"], [m.qk_nope_head_dim], axis=-1)
     # absorb W_k^nope into q: [B,1,H,r]
-    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, wk_b)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, wk_b,
+                       preferred_element_type=jnp.float32)
     scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
     s = (
-        jnp.einsum("bshr,btr->bhst", q_lat, cache_ckv)
-        + jnp.einsum("bshk,btk->bhst", q_rope, cache_krope)
-    ).astype(jnp.float32) * scale
+        jnp.einsum("bshr,btr->bhst", q_lat, cache_ckv,
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bshk,btk->bhst", q_rope, cache_krope,
+                     preferred_element_type=jnp.float32)
+    ) * scale
     valid = jnp.arange(s_max)[None, :] <= posv  # [B, S]
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
-    pattn = jax.nn.softmax(s, axis=-1).astype(x.dtype)
-    o_lat = jnp.einsum("bhst,btr->bshr", pattn, cache_ckv)  # [B,1,H,r]
-    o = jnp.einsum("bshr,rhk->bshk", o_lat, wv_b)  # [B,1,H,v]
+    pattn = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhst,btr->bshr", pattn, cache_ckv,
+                       preferred_element_type=jnp.float32)  # [B,1,H,r]
+    o = jnp.einsum("bshr,rhk->bshk", o_lat, wv_b,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), cache_ckv, cache_krope
 
 
 # --------------------------------------------- paged (block-table) decode
+def _paged_backend(cfg, backend):
+    """Resolve the paged decode-attention backend: an explicit `backend`
+    overrides `cfg.paged_attn_backend` ("auto" = Pallas kernel on TPU,
+    dense-gather ref elsewhere; "pallas" forces the kernel, interpret
+    mode off-TPU, so CPU CI exercises the kernel path)."""
+    from repro.kernels.paged_attention import resolve_backend
+
+    return resolve_backend(backend or getattr(cfg, "paged_attn_backend", "auto"))
+
+
 def paged_gather(pool: jnp.ndarray, tables: jnp.ndarray) -> jnp.ndarray:
     """Linearize each row's blocks: pool [N(+1), bs, ...] gathered by
-    tables [B, nb] -> [B, nb*bs, ...]. Row b's logical position t lives
-    at pool[tables[b, t // bs], t % bs]; invalid table entries point at
-    the trash block and are excluded by the caller's position mask."""
-    g = pool[tables]  # [B, nb, bs, ...]
-    return g.reshape(g.shape[0], g.shape[1] * g.shape[2], *g.shape[3:])
+    tables [B, nb] -> [B, nb*bs, ...]. Invalid table entries point at
+    the trash block and are excluded by the caller's position mask.
+    Delegates to the kernel package's single linearization contract."""
+    from repro.kernels.paged_attention.ref import linearize_blocks
+
+    return linearize_blocks(pool, tables)
 
 
 def _paged_write(pool, tables, pos, val):
@@ -394,20 +416,23 @@ def _paged_write(pool, tables, pos, val):
     return pool.at[bid, pos % bs].set(val)
 
 
-def gqa_decode_paged(p: Params, cfg, x, pool_k, pool_v, tables, pos):
+def gqa_decode_paged(p: Params, cfg, x, pool_k, pool_v, tables, pos,
+                     backend=None):
     """One-token GQA decode against a paged (block-pool) cache.
 
     x: [B, 1, D]; pool_k/pool_v: [N+1, bs, Kv, hd] shared block pools
     (last block is the write trash for dead rows); tables: [B, nb]
     int32 per-row block tables; pos: int32 [B] absolute positions.
 
-    The new token's K/V is written to its row's tail block, then K/V is
-    gathered BY BLOCK TABLE into the row-linear layout and attention
-    runs with the same per-row position mask as the contiguous path —
-    same numerics as `gqa_decode` for any block layout
-    (tests/test_paged_kv.py). Shared (prefix-cache) blocks are full and
-    immutable, so the post-write gather can never see another row's
-    in-flight token.
+    The new token's K/V is written to its row's tail block, then
+    attention runs over the row's blocks with the same per-row position
+    mask as the contiguous path — same numerics as `gqa_decode` for any
+    block layout (tests/test_paged_kv.py). `backend` (default
+    `cfg.paged_attn_backend`) picks the block-sparse Pallas kernel
+    (kernels/paged_attention — walks only each row's blocks, online
+    softmax) or the dense-gather reference, which linearizes the full
+    table width. Shared (prefix-cache) blocks are full and immutable,
+    so the post-write read can never see another row's in-flight token.
     """
     b = x.shape[0]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
@@ -421,19 +446,32 @@ def gqa_decode_paged(p: Params, cfg, x, pool_k, pool_v, tables, pos):
     k = apply_rope(k, posv, cfg.rope_theta)
     pool_k = _paged_write(pool_k, tables, pos, k[:, 0])
     pool_v = _paged_write(pool_v, tables, pos, v[:, 0])
-    keys = paged_gather(pool_k, tables)  # [B, nb*bs, Kv, hd]
-    vals = paged_gather(pool_v, tables)
-    valid = jnp.arange(keys.shape[1])[None, :] <= posv
-    out = _grouped_attention(q, keys, vals, valid=valid)
+    kind, interpret = _paged_backend(cfg, backend)
+    if kind == "pallas":
+        from repro.kernels.paged_attention import paged_decode_gqa
+
+        kvh = pool_k.shape[2]
+        qk = q[:, 0].reshape(b, kvh, q.shape[2] // kvh, q.shape[3])
+        out = paged_decode_gqa(
+            qk, pool_k, pool_v, tables, pos, interpret=interpret
+        ).reshape(b, 1, q.shape[2], q.shape[3])
+    else:
+        keys = paged_gather(pool_k, tables)  # [B, nb*bs, Kv, hd]
+        vals = paged_gather(pool_v, tables)
+        valid = jnp.arange(keys.shape[1])[None, :] <= posv
+        out = _grouped_attention(q, keys, vals, valid=valid)
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), pool_k, pool_v
 
 
-def mla_decode_paged(p: Params, cfg, x, pool_ckv, pool_krope, tables, pos):
+def mla_decode_paged(p: Params, cfg, x, pool_ckv, pool_krope, tables, pos,
+                     backend=None):
     """Absorbed MLA decode against paged latent pools.
 
     pool_ckv: [N+1, bs, r]; pool_krope: [N+1, bs, rope_dim]; tables:
-    [B, nb]; pos: [B]. Same math as `mla_decode` over the block-table
-    gather."""
+    [B, nb]; pos: [B]. Same math (and fp32 accumulation) as
+    `mla_decode` over the row's blocks; `backend` as in
+    `gqa_decode_paged` — the Pallas kernel attends in latent space and
+    the wv_b expansion stays out here."""
     m = cfg.mla
     b = x.shape[0]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
@@ -448,19 +486,33 @@ def mla_decode_paged(p: Params, cfg, x, pool_ckv, pool_krope, tables, pos):
     krope_new = apply_rope(krope_new[:, :, None, :], posv, cfg.rope_theta)[:, :, 0, :]
     pool_ckv = _paged_write(pool_ckv, tables, pos, ckv_new[:, 0])
     pool_krope = _paged_write(pool_krope, tables, pos, krope_new[:, 0])
-    cache_ckv = paged_gather(pool_ckv, tables)  # [B, nb*bs, r]
-    cache_krope = paged_gather(pool_krope, tables)
 
     wk_b, wv_b = jnp.split(p["wkv_b"], [m.qk_nope_head_dim], axis=-1)
-    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, wk_b)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, wk_b,
+                       preferred_element_type=jnp.float32)
     scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
-    s = (
-        jnp.einsum("bshr,btr->bhst", q_lat, cache_ckv)
-        + jnp.einsum("bshk,btk->bhst", q_rope, cache_krope)
-    ).astype(jnp.float32) * scale
-    valid = jnp.arange(cache_ckv.shape[1])[None, :] <= posv
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
-    pattn = jax.nn.softmax(s, axis=-1).astype(x.dtype)
-    o_lat = jnp.einsum("bhst,btr->bshr", pattn, cache_ckv)
-    o = jnp.einsum("bshr,rhk->bshk", o_lat, wv_b)
+    kind, interpret = _paged_backend(cfg, backend)
+    if kind == "pallas":
+        from repro.kernels.paged_attention import paged_decode_mla
+
+        o_lat = paged_decode_mla(
+            q_lat[:, 0], q_rope[:, 0].astype(jnp.float32), pool_ckv,
+            pool_krope, tables, pos, scale=scale, interpret=interpret,
+        )[:, None]  # [B,1,H,r] fp32
+    else:
+        cache_ckv = paged_gather(pool_ckv, tables)  # [B, nb*bs, r]
+        cache_krope = paged_gather(pool_krope, tables)
+        s = (
+            jnp.einsum("bshr,btr->bhst", q_lat, cache_ckv,
+                       preferred_element_type=jnp.float32)
+            + jnp.einsum("bshk,btk->bhst", q_rope, cache_krope,
+                         preferred_element_type=jnp.float32)
+        ) * scale
+        valid = jnp.arange(cache_ckv.shape[1])[None, :] <= posv
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        pattn = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhst,btr->bshr", pattn, cache_ckv,
+                           preferred_element_type=jnp.float32)
+    o = jnp.einsum("bshr,rhk->bshk", o_lat, wv_b,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), pool_ckv, pool_krope

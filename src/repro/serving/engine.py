@@ -234,6 +234,7 @@ class TriMoEServingEngine:
         self._prefill_paged = jax.jit(prefill_paged_fn)
         self.prefill_rows = prefill_rows
         self._prefill_shapes = set()  # (rows, width) fallback compile count
+        self.decode_table_widths = set()  # distinct sliced widths (pow2)
         self._migrate = jax.jit(apply_migrations)
         self._layer_keys = self._flatten_layer_keys()
 
@@ -358,23 +359,43 @@ class TriMoEServingEngine:
             self.stats.prefill_tokens += int(lens.sum())
         return out[0] if len(out) == 1 else jnp.concatenate(out)
 
+    def _active_table_width(self, pos, live) -> int:
+        """Block-table columns decode actually needs this step (the
+        decode analogue of the prefill bucket bound — pow2 widths, at
+        most log2(blocks_per_slot) compiles per group width)."""
+        from repro.kernels.paged_attention import active_block_width
+
+        mx = int(pos[live].max()) if live.any() else 0
+        return active_block_width(
+            mx, self.kv.block_size, max(1, self.kv.blocks_per_slot)
+        )
+
     def step_slots_paged(self, tokens, pos, slot_indices, tables, live=None):
         """Paged decode of the active zigzag group: recurrent state rows
         gather/scatter by slot index as in `step_slots`, while attention
         K/V reads and writes go through the shared block pools by each
-        row's block table (`tables` [W, nb] int32). Returns (logits,
-        expert_counts) without replanning — see `step_slots`."""
+        row's block table (`tables` [W, nb] int32). The table is SLICED
+        to the pow2-bucketed active width first, so decode attention
+        (Pallas kernel or dense-gather ref) touches O(longest live row)
+        blocks instead of the full `blocks_per_slot` — positions beyond
+        a row's length were masked to exp(-inf) = 0 exactly, so the
+        slice is numerics-preserving. Returns (logits, expert_counts)
+        without replanning — see `step_slots`."""
         assert isinstance(self.kv, PagedKVCache)
         idx = jnp.asarray(slot_indices, jnp.int32)
         live = (
             np.ones((len(slot_indices),), bool) if live is None
             else np.asarray(live, bool)
         )
+        pos = np.asarray(pos, np.int64)
         # dead rows still write their (garbage) K/V — point them at the
         # trash block so a just-completed slot can never corrupt its own
         # (possibly shared / radix-indexed) blocks before recycling
         tables = np.array(tables, np.int32, copy=True)
         tables[~live] = self.kv.trash
+        width = self._active_table_width(pos, live)
+        self.decode_table_widths.add(width)
+        tables = tables[:, :width]
         logits, self.kv.pools, self.kv.slot_state, counts = self._step_paged(
             self.params, jnp.asarray(tokens), self.kv.pools,
             self.kv.slot_state, jnp.asarray(tables), idx,

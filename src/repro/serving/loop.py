@@ -117,6 +117,12 @@ class ServingLoop:
     reclaimed feeds `tiered_moe.tier_sizes(reclaimed_kv_bytes=...)` —
     more hot-resident experts. `kv_layout="slots"` restores the
     contiguous SlotKVCache.
+
+    Decode attention against the pools is BLOCK-SPARSE: the engine
+    slices each step's block tables to the pow2-bucketed active width,
+    and `paged_attn_backend` ("auto" | "pallas" | "ref", default the
+    config's setting) picks the Pallas paged-attention kernel
+    (kernels/paged_attention) or the jnp dense-gather path.
     """
 
     def __init__(
@@ -140,9 +146,12 @@ class ServingLoop:
         block_size: int = 4,
         kv_pool_blocks: Optional[int] = None,
         prefix_cache: bool = True,
+        paged_attn_backend: Optional[str] = None,
     ):
         assert cfg.moe is not None, "ServingLoop drives the TriMoE MoE path"
         assert kv_layout in ("paged", "slots"), kv_layout
+        if paged_attn_backend is not None:
+            cfg = dataclasses.replace(cfg, paged_attn_backend=paged_attn_backend)
         self.cfg = cfg
         self.paged = kv_layout == "paged"
         if self.paged:

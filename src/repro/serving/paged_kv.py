@@ -159,22 +159,27 @@ class RadixPrefixIndex:
 
     def insert(self, tokens, block_ids: Sequence[int]) -> List[int]:
         """Index `tokens`' full blocks, adopting the caller's physical
-        blocks for chunks not yet present. Returns the ADOPTED block
-        ids (chunks already indexed keep the tree's original block; the
-        caller's duplicate stays solely refcount-owned and recycles
-        normally)."""
-        node, adopted, stamp = self.root, [], self._tick()
+        blocks for chunks not yet present. Returns the CANONICAL block
+        id per chunk: the caller's block where it was adopted, the
+        tree's original block where the chunk was already indexed
+        (chunk content — the token tuple hashed by the child dict — is
+        the dedup key; a path match implies the whole prefix matches).
+        A caller holding a different block than the returned canonical
+        one computed a concurrent duplicate and should repoint to the
+        canonical block and release its copy
+        (PagedKVCache.commit_prompt)."""
+        node, canonical, stamp = self.root, [], self._tick()
         for chunk, bid in zip(self._chunks(tokens), block_ids):
             nxt = node.children.get(chunk)
             if nxt is None:
                 nxt = _RadixNode(node, chunk, int(bid), stamp)
                 node.children[chunk] = nxt
                 self._nodes[int(bid)] = nxt
-                adopted.append(int(bid))
             else:
                 nxt.stamp = stamp
+            canonical.append(nxt.block_id)
             node = nxt
-        return adopted
+        return canonical
 
     def __contains__(self, block_id: int) -> bool:
         return int(block_id) in self._nodes
@@ -204,12 +209,16 @@ class PagedStats:
     hit_tokens: int = 0  # prompt tokens served from cache, no recompute
     evictions: int = 0
     cow_copies: int = 0
+    dedup_blocks: int = 0  # duplicate blocks reclaimed at commit time
     peak_blocks_in_use: int = 0  # high-water mark of live references
 
     @property
     def hit_rate(self) -> float:
-        """Fraction of looked-up prompt tokens served from cache."""
-        return self.hit_tokens / max(self.lookup_tokens, 1)
+        """Fraction of looked-up prompt tokens served from cache;
+        exactly 0.0 before any traffic (no division by zero)."""
+        if self.lookup_tokens <= 0:
+            return 0.0
+        return self.hit_tokens / self.lookup_tokens
 
 
 class PagedKVCache:
@@ -303,7 +312,12 @@ class PagedKVCache:
     def reclaimed_bytes(self, cache_len: int) -> int:
         """HBM the paged layout hands back vs the contiguous SlotKVCache
         at the same slot count — the budget `tier_sizes` converts into
-        extra hot-resident experts."""
+        extra hot-resident experts. Never negative (a pool LARGER than
+        the contiguous reservation reclaims nothing), and exactly 0 for
+        a zero/negative `cache_len` (there is no contiguous layout to
+        compare against)."""
+        if cache_len <= 0:
+            return 0
         return max(
             0, cache_bytes(self.cfg, self.n_slots, cache_len) - self.paged_bytes()
         )
@@ -338,8 +352,9 @@ class PagedKVCache:
     def match_tokens(self, prompt) -> int:
         """Longest reusable cached prefix of `prompt`, in tokens: full
         blocks only, capped so at least the last prompt token is left
-        to prefill (its logits sample the first generated token)."""
-        if self.radix is None:
+        to prefill (its logits sample the first generated token).
+        Well-defined (0, never negative) for empty/one-token prompts."""
+        if self.radix is None or len(prompt) <= 1:
             return 0
         usable = ((len(prompt) - 1) // self.block_size) * self.block_size
         return min(len(self.radix.match(prompt)) * self.block_size, usable)
@@ -356,8 +371,9 @@ class PagedKVCache:
         row = self.tables[slot]
         self.stats.lookups += 1
         self.stats.lookup_tokens += plen
-        if self.radix is not None:
+        if self.radix is not None and plen > 1:
             blocks = self.radix.match(prompt)
+            # never negative: a 0/1-token prompt has no reusable prefix
             usable = ((plen - 1) // self.block_size) * self.block_size
             past = min(len(blocks) * self.block_size, usable)
             for lb in range(past // self.block_size):
@@ -377,11 +393,31 @@ class PagedKVCache:
 
     def commit_prompt(self, slot: int, prompt) -> None:
         """Index the prompt's full blocks after their K/V has been
-        computed, so concurrent and future admissions can share them."""
+        computed, so concurrent and future admissions can share them.
+
+        Content dedup: when another slot committed the same chunk first
+        (two requests with a shared uncached prefix admitted in the
+        same wave each compute their own copy), `insert` returns the
+        tree's canonical block — this slot is repointed to it and its
+        duplicate is reclaimed IMMEDIATELY instead of idling until the
+        slot frees. Only full committed blocks are ever repointed
+        (decode appends past them), so no writer can race the swap."""
         if self.radix is None:
             return
         n_full = len(prompt) // self.block_size
-        self.radix.insert(prompt, [int(b) for b in self.tables[slot][:n_full]])
+        mine = [int(b) for b in self.tables[slot][:n_full]]
+        canonical = self.radix.insert(prompt, mine)
+        for lb, (dup, canon) in enumerate(zip(mine, canonical)):
+            if canon == dup:
+                continue
+            if self.refcount[dup] != 1:
+                # defensive: a shared-but-uncanonical block can only be
+                # radix-sourced, which implies canon == dup — skip
+                continue
+            self.tables[slot, lb] = canon
+            self.refcount[canon] += 1
+            self._decref(dup)
+            self.stats.dedup_blocks += 1
 
     def ensure_block(self, slot: int, pos: int) -> None:
         """Decode-time: make position `pos` writable for `slot` —

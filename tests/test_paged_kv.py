@@ -181,8 +181,9 @@ def test_radix_match_insert_and_lru_leaf_first_eviction():
     r = RadixPrefixIndex(2)
     assert r.insert([1, 2, 3, 4], [10, 11]) == [10, 11]
     assert r.insert([5, 6], [12]) == [12]
-    # duplicate chunk is not re-adopted
-    assert r.insert([1, 2, 9, 9], [13, 14]) == [14]
+    # duplicate chunk is not re-adopted: the canonical (tree) block
+    # comes back so the caller can reclaim its copy
+    assert r.insert([1, 2, 9, 9], [13, 14]) == [10, 14]
     assert r.match([1, 2, 3, 4, 7]) == [10, 11]
     assert r.match([1, 2, 9, 9]) == [10, 14]
     assert r.match([5, 6, 1]) == [12]
@@ -279,6 +280,60 @@ def test_on_demand_alloc_and_exhaustion():
     cfg2, tiny = _mini_kv(n_slots=1, cache_len=16, block_size=4, n_blocks=2)
     with pytest.raises(RuntimeError, match="exhausted"):
         tiny.admit_slot(0, np.arange(12, dtype=np.int32))
+
+
+def test_commit_dedups_concurrent_duplicate_blocks():
+    """Two slots admitted in the same wave (before either commits)
+    each compute the shared prefix's blocks; the second commit must
+    repoint to the first's canonical blocks and reclaim its duplicates
+    IMMEDIATELY — not when the slot eventually frees."""
+    cfg, kv = _mini_kv()
+    prompt_a = np.arange(9, dtype=np.int32)
+    prompt_b = np.concatenate([np.arange(8), [99]]).astype(np.int32)
+    # both admitted cold (empty radix): each allocates its own blocks
+    assert kv.admit_slot(0, prompt_a) == 0
+    assert kv.admit_slot(1, prompt_b) == 0
+    dup = [int(b) for b in kv.tables[1][:2]]
+    assert kv.blocks_in_use == 6  # 3 + 3, no sharing yet
+    kv.commit_prompt(0, prompt_a)
+    before = kv.blocks_in_use
+    kv.commit_prompt(1, prompt_b)
+    # slot 1's two full prefix blocks were deduped against slot 0's
+    canon = [int(b) for b in kv.tables[0][:2]]
+    assert [int(b) for b in kv.tables[1][:2]] == canon
+    assert all(kv.refcount[b] == 2 for b in canon)
+    assert all(kv.refcount[b] == 0 and b in kv._free for b in dup)
+    assert kv.blocks_in_use == before - 2
+    assert kv.stats.dedup_blocks == 2
+    kv.free_slot(0)
+    kv.free_slot(1)
+    assert all(kv.refcount[b] == 0 for b in canon)
+
+
+def test_stats_and_reclaim_zero_traffic_edge_cases():
+    """hit_rate with no lookups, match/admit of empty and one-token
+    prompts, and reclaimed_bytes at zero cache_len are all well-defined
+    (no division by zero, no negative reclaim, no negative prefix)."""
+    cfg, kv = _mini_kv()
+    assert kv.stats.hit_rate == 0.0  # 0 lookups: defined, not 0/0
+    assert kv.match_tokens(np.asarray([], np.int32)) == 0
+    assert kv.match_tokens(np.asarray([7], np.int32)) == 0
+    # a cached block must not make a 1-token prompt match negative/positive
+    prompt = np.arange(8, dtype=np.int32)
+    kv.admit_slot(0, prompt)
+    kv.free_slot(0, tokens=prompt)
+    assert kv.match_tokens(prompt[:1]) == 0
+    assert kv.match_tokens(prompt[:0]) == 0
+    # empty-prompt admission: no blocks, no negative past
+    past = kv.admit_slot(1, np.asarray([], np.int32))
+    assert past == 0
+    assert all(b == kv.trash for b in kv.tables[1])
+    assert kv.stats.hit_rate >= 0.0
+    kv.free_slot(1)
+    # reclaim never negative, and zero at degenerate cache_len
+    assert kv.reclaimed_bytes(0) == 0
+    assert kv.reclaimed_bytes(-3) == 0
+    assert kv.reclaimed_bytes(1) >= 0
 
 
 def test_copy_on_write_preserves_shared_reader():
