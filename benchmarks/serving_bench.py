@@ -9,11 +9,18 @@ config, runs one untimed warmup pass (compilation), then times a full
 serve of the request set.
 
 Mixed mode (--mixed): serves a trace with many DISTINCT prompt lengths
-and reports tok/s plus distinct prefill jit compiles. With length
-bucketing (the loop default) the prefill must compile at most
-len(bucket_table) times — the mode exits nonzero otherwise, which is
-the CI compile-count gate. Total backend compiles (decode, migration,
-...) are also counted via the jax.monitoring compile hook.
+PLUS one long prompt admitted mid-trace while other slots decode (the
+decode-churn scenario chunked piggyback prefill exists for), twice —
+chunked_prefill ON vs OFF — and reports tok/s, TTFT p50/p95, ITL
+p50/p95 for both, plus distinct prefill jit compiles. With length
+bucketing and chunked paged prefill (the loop defaults) the prefill
+must compile at most len(bucket_table) x n_width_buckets(
+blocks_per_slot) times (chunk-width buckets x pow2 past-table widths)
+— the mode exits nonzero otherwise, which is the CI compile-count
+gate. With --baseline-json, ITL-p95 must also hold the committed
+BENCH_serving.json level within --itl-slack (the nightly latency
+regression gate). Total backend compiles (decode, migration, ...) are
+also counted via the jax.monitoring compile hook.
 
 Prefix mode (--prefix): replays a shared-system-prompt workload (every
 request = one long shared prefix + a short unique suffix) through the
@@ -146,6 +153,9 @@ def mixed_lengths(n: int):
 
 
 def run_mixed(args) -> int:
+    from repro.kernels.paged_attention import n_width_buckets
+    from repro.serving.loop import LoopStats
+
     cfg = reduce_for_smoke(get_config(args.arch))
     params = init_params(jax.random.PRNGKey(0), cfg)
     import numpy as np
@@ -153,57 +163,141 @@ def run_mixed(args) -> int:
     lengths = mixed_lengths(args.mixed_lengths)
     new_tokens = args.new_tokens if not args.smoke else 6
     n_requests = args.requests if not args.smoke else 2 * len(lengths)
-    cache_len = max(lengths) + new_tokens
-    loop = ServingLoop(cfg, params, batch_size=args.mixed_batch,
-                       n_groups=args.mixed_groups, cache_len=cache_len)
-    table = loop.bucket_table
-    rng = np.random.default_rng(11)
-    with CompileCounter() as cc:
-        for rid in range(n_requests):
-            plen = lengths[rid % len(lengths)]
-            loop.submit(Request(
+    long_len = args.mixed_long_prompt
+    cache_len = max(max(lengths), long_len) + new_tokens
+
+    def make_reqs(seed):
+        rng = np.random.default_rng(seed)
+        reqs = [
+            Request(
                 rid=rid,
-                prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+                prompt=rng.integers(
+                    0, cfg.vocab_size, lengths[rid % len(lengths)]
+                ).astype(np.int32),
+                max_new_tokens=new_tokens,
+            )
+            for rid in range(n_requests)
+        ]
+        if long_len:
+            # decode-churn scenario: one LONG prompt admitted mid-trace,
+            # while earlier admissions are mid-decode — without chunked
+            # piggyback its monolithic prefill stalls every in-flight
+            # row (the ITL spike this mode measures)
+            reqs.insert(max(1, n_requests // 3), Request(
+                rid=n_requests,
+                prompt=rng.integers(0, cfg.vocab_size, long_len)
+                .astype(np.int32),
                 max_new_tokens=new_tokens,
             ))
-        done = loop.run()
-    st = loop.stats
+        return reqs
+
+    def serve(chunked):
+        loop = ServingLoop(
+            cfg, params, batch_size=args.mixed_batch,
+            n_groups=args.mixed_groups, cache_len=cache_len,
+            chunked_prefill=chunked,
+            prefill_chunk_tokens=args.chunk_budget,
+        )
+        # untimed warmup pass (same length profile, different tokens):
+        # jit compiles would otherwise dominate the TTFT/ITL percentiles
+        # the baseline gate compares across runs
+        for r in make_reqs(7):
+            loop.submit(r)
+        loop.run()
+        loop.stats = LoopStats()
+        for r in make_reqs(11):
+            loop.submit(r)
+        loop.run()
+        return loop, loop.stats.completed
+
+    n_total = n_requests + (1 if long_len else 0)
+    with CompileCounter() as cc:
+        loop, done_c = serve(True)
+        nochunk, done_n = serve(False)
+    st, st_n = loop.stats, nochunk.stats
+    table = loop.bucket_table
     compiles = loop.engine.prefill_compiles
-    print(f"[serving_bench] mixed trace: {len(done)}/{n_requests} requests, "
-          f"{len(set(lengths))} distinct prompt lengths, "
-          f"buckets={list(table.widths)}")
-    print(f"[serving_bench] {st.summary()}")
-    print(f"[serving_bench] prefill compiles: {compiles} "
-          f"(bucket-table bound: {len(table)}); "
+    bound = len(table) * n_width_buckets(loop.kv.blocks_per_slot)
+    print(f"[serving_bench] mixed trace: {done_c}/{n_total} requests, "
+          f"{len(set(lengths))} distinct prompt lengths + 1 long "
+          f"({long_len} tokens), buckets={list(table.widths)}, "
+          f"chunk budget={loop.prefill_chunk_tokens} tokens/step")
+    print(f"[serving_bench] chunked:    {st.summary()}")
+    print(f"[serving_bench] no-chunk:   {st_n.summary()}")
+    print(f"[serving_bench] ttft p50/p95: {st.ttft_p50_s*1e3:.0f}/"
+          f"{st.ttft_p95_s*1e3:.0f}ms (no-chunk {st_n.ttft_p50_s*1e3:.0f}/"
+          f"{st_n.ttft_p95_s*1e3:.0f}ms); itl p50/p95: "
+          f"{st.itl_p50_s*1e3:.0f}/{st.itl_p95_s*1e3:.0f}ms (no-chunk "
+          f"{st_n.itl_p50_s*1e3:.0f}/{st_n.itl_p95_s*1e3:.0f}ms)")
+    print(f"[serving_bench] prefill compiles: {compiles} (bound: "
+          f"{len(table)} buckets x "
+          f"{n_width_buckets(loop.kv.blocks_per_slot)} table widths = "
+          f"{bound}); prefill table widths: "
+          f"{sorted(loop.engine.prefill_table_widths)}; "
           f"total backend compiles: {cc.count}")
 
     result = {
         "mode": "mixed",
         "arch": cfg.name,
-        "requests": n_requests,
+        "requests": n_total,
         "distinct_prompt_lengths": len(set(lengths)),
         "prompt_lengths": list(lengths),
+        "long_prompt_len": long_len,
         "new_tokens": new_tokens,
         "batch": args.mixed_batch,
         "groups": args.mixed_groups,
         "bucket_table": list(table.widths),
+        "chunked_prefill": True,
+        "prefill_chunk_tokens": loop.prefill_chunk_tokens,
+        "prefill_chunks": st.prefill_chunks,
         "tokens_per_s": round(st.tokens_per_s, 1),
         "mean_utilization": round(st.mean_utilization, 3),
         "mean_latency_ms": round(st.mean_latency_s * 1e3, 1),
+        "ttft_p50_ms": round(st.ttft_p50_s * 1e3, 1),
+        "ttft_p95_ms": round(st.ttft_p95_s * 1e3, 1),
+        "itl_p50_ms": round(st.itl_p50_s * 1e3, 1),
+        "itl_p95_ms": round(st.itl_p95_s * 1e3, 1),
+        "nochunk_tokens_per_s": round(st_n.tokens_per_s, 1),
+        "nochunk_ttft_p95_ms": round(st_n.ttft_p95_s * 1e3, 1),
+        "nochunk_itl_p95_ms": round(st_n.itl_p95_s * 1e3, 1),
         "prefill_compiles": compiles,
+        "prefill_compile_bound": bound,
+        "prefill_table_widths": sorted(loop.engine.prefill_table_widths),
         "backend_compiles": cc.count,
     }
+    # snapshot the committed baseline BEFORE (possibly) overwriting it
+    baseline = (
+        _baseline_entry(args.baseline_json, "mixed")
+        if args.baseline_json else None
+    )
     if args.json:
         write_json(args.json, "mixed", result)
 
-    if len(done) != n_requests:
-        print(f"[serving_bench] FAIL: only {len(done)}/{n_requests} completed")
-        return 1
-    if compiles > len(table):
+    rc = 0
+    if done_c != n_total or done_n != n_total:
+        print(f"[serving_bench] FAIL: incomplete serve (chunked {done_c}, "
+              f"no-chunk {done_n} of {n_total})")
+        rc = 1
+    if compiles > bound:
         print(f"[serving_bench] FAIL: {compiles} distinct prefill compiles "
-              f"exceed the bucket-table size {len(table)}")
-        return 1
-    return 0
+              f"exceed the bucket x table-width bound {bound}")
+        rc = 1
+    if args.baseline_json:
+        base_itl = None if baseline is None else baseline.get("itl_p95_ms")
+        if base_itl is None:
+            print(f"[serving_bench] note: no mixed ITL baseline in "
+                  f"{args.baseline_json}; gate skipped")
+        else:
+            # machine-relative-ish: absolute latency varies across
+            # runners, so the ceiling carries --itl-slack headroom
+            ceil = args.itl_slack * float(base_itl)
+            ok = st.itl_p95_s * 1e3 <= ceil
+            print(f"[serving_bench] {'ok' if ok else 'FAIL'}: itl_p95 "
+                  f"{st.itl_p95_s*1e3:.1f}ms vs baseline "
+                  f"{float(base_itl):.1f}ms (ceiling {ceil:.1f}ms = "
+                  f"{args.itl_slack}x)")
+            rc = rc if ok else 1
+    return rc
 
 
 # --------------------------------------------------- shared-prefix mode
@@ -327,9 +421,12 @@ def run_prefix(args) -> int:
         ))
     reuse.run()
     reuse.stats, kv.stats = timed_stats, timed_kv_stats
+    from repro.kernels.paged_attention import n_width_buckets
+
     speedup = reuse.stats.tokens_per_s / max(noreuse.stats.tokens_per_s, 1e-9)
     compiles = reuse.engine.prefill_compiles
     table = reuse.bucket_table
+    compile_bound = len(table) * n_width_buckets(reuse.kv.blocks_per_slot)
     attn_full_us, attn_sparse_us, act_w, full_w = bench_decode_attention(
         reuse, args.prefix_len + args.suffix_len + new_tokens
     )
@@ -345,7 +442,9 @@ def run_prefix(args) -> int:
           f"/{kv.n_blocks}, speedup {speedup:.2f}x "
           f"(floor {args.min_speedup}x)")
     print(f"[serving_bench] prefill compiles: {compiles} "
-          f"(bucket-table bound: {len(table)}); "
+          f"(bucket x table-width bound: {compile_bound}); prefill "
+          f"table widths: {sorted(reuse.engine.prefill_table_widths)} "
+          f"of {reuse.kv.blocks_per_slot} blocks/slot; "
           f"total backend compiles: {cc.count}")
     print(f"[serving_bench] decode attention: block-sparse "
           f"{attn_sparse_us:.0f}us ({act_w}/{full_w} blocks) vs dense "
@@ -372,6 +471,8 @@ def run_prefix(args) -> int:
         "peak_blocks_in_use": kv.stats.peak_blocks_in_use,
         "blocks_cached": kv.blocks_cached,
         "prefill_compiles": compiles,
+        "prefill_compile_bound": compile_bound,
+        "prefill_table_widths": sorted(reuse.engine.prefill_table_widths),
         "backend_compiles": cc.count,
         "decode_attn_dense_us": round(attn_full_us, 1),
         "decode_attn_sparse_us": round(attn_sparse_us, 1),
@@ -382,7 +483,8 @@ def run_prefix(args) -> int:
     }
     # snapshot the committed baseline BEFORE (possibly) overwriting it
     baseline = (
-        _baseline_prefix(args.baseline_json) if args.baseline_json else None
+        _baseline_entry(args.baseline_json, "prefix")
+        if args.baseline_json else None
     )
     if args.json:
         write_json(args.json, "prefix", result)
@@ -400,9 +502,9 @@ def run_prefix(args) -> int:
         print(f"[serving_bench] FAIL: prefix reuse speedup {speedup:.2f}x "
               f"< floor {args.min_speedup}x")
         rc = 1
-    if compiles > len(table):
+    if compiles > compile_bound:
         print(f"[serving_bench] FAIL: {compiles} distinct prefill compiles "
-              f"exceed the bucket-table size {len(table)}")
+              f"exceed the bucket x table-width bound {compile_bound}")
         rc = 1
     if not reuse.engine.decode_table_widths:
         print("[serving_bench] FAIL: the decode probe never reached "
@@ -439,8 +541,8 @@ def run_prefix(args) -> int:
     return rc
 
 
-def _baseline_prefix(path):
-    """The committed prefix-mode result dict (BENCH_serving.json), or
+def _baseline_entry(path, mode):
+    """The committed result dict for `mode` (BENCH_serving.json), or
     None when the file/section is missing, unreadable, or carries no
     gateable metrics (so the caller prints its 'gate skipped' note
     instead of silently passing)."""
@@ -449,10 +551,11 @@ def _baseline_prefix(path):
             data = json.load(f)
     except (OSError, ValueError):
         return None
-    entry = data.get("prefix", data)
+    entry = data.get(mode, data)
     if not isinstance(entry, dict):
         return None
-    if entry.get("speedup") is None and entry.get("tokens_per_s") is None:
+    gateable = ("speedup", "tokens_per_s", "itl_p95_ms")
+    if all(entry.get(k) is None for k in gateable):
         return None
     return entry
 
@@ -525,6 +628,18 @@ def main(argv=None):
                     help="number of distinct prompt lengths (>=6)")
     ap.add_argument("--mixed-batch", type=int, default=8)
     ap.add_argument("--mixed-groups", type=int, default=2)
+    ap.add_argument("--mixed-long-prompt", type=int, default=192,
+                    help="length of the one long prompt admitted "
+                         "mid-trace (0 disables the churn scenario); "
+                         "long enough that its monolithic prefill is a "
+                         "real decode stall, not just call overhead")
+    ap.add_argument("--chunk-budget", type=int, default=32,
+                    help="prefill_chunk_tokens for the --mixed chunked "
+                         "pass (None = the loop default)")
+    ap.add_argument("--itl-slack", type=float, default=2.0,
+                    help="allowed ITL-p95 multiple of the committed "
+                         "baseline in --mixed (absolute latency varies "
+                         "across runners)")
     ap.add_argument("--prefix", action="store_true",
                     help="shared-system-prompt replay: gates prefix "
                          "hit-rate > 0, >= --min-speedup over no-reuse, "

@@ -1,4 +1,4 @@
-"""Backend dispatch for paged decode attention.
+"""Backend dispatch and width bucketing for paged attention.
 
 `resolve_backend` maps the config-level choice ("auto" | "pallas" |
 "ref") to a concrete (backend, interpret) pair: the Pallas kernel runs
@@ -6,6 +6,12 @@ natively on TPU and in interpret mode everywhere else (CPU CI still
 exercises the kernel path), "auto" picks the kernel on TPU and the jnp
 dense-gather reference off-TPU (interpret mode is far slower than XLA's
 fused gather on CPU, so it is opt-in there).
+
+`active_block_width` is the single pow2 width-bucketing rule both
+serving phases slice block tables with: decode buckets by the longest
+live row, chunked prefill by the furthest row end (prefix + suffix),
+so either path's attention reads O(active blocks), not
+O(blocks_per_slot), at a bounded compile count.
 """
 from __future__ import annotations
 
@@ -16,33 +22,54 @@ import jax
 from repro.kernels.paged_attention.paged_attention import (
     paged_decode_gqa,
     paged_decode_mla,
+    paged_prefill_gqa,
+    paged_prefill_mla,
 )
 from repro.kernels.paged_attention.ref import (
     paged_decode_gqa_ref,
     paged_decode_mla_ref,
+    paged_prefill_gqa_ref,
+    paged_prefill_mla_ref,
 )
 
 __all__ = [
     "resolve_backend",
     "active_block_width",
+    "n_width_buckets",
     "paged_decode_gqa",
     "paged_decode_mla",
     "paged_decode_gqa_ref",
     "paged_decode_mla_ref",
+    "paged_prefill_gqa",
+    "paged_prefill_mla",
+    "paged_prefill_gqa_ref",
+    "paged_prefill_mla_ref",
 ]
 
 
 def active_block_width(max_pos: int, block_size: int, max_blocks: int) -> int:
-    """Block-table columns decode actually needs for rows ending at
-    `max_pos`: ceil((max_pos + 1) / block_size), rounded up to a power
-    of two (compile reuse — at most log2(max_blocks) distinct widths),
-    capped at the full table width. The single source of truth for the
-    engine's table slicing AND the benches that measure it."""
+    """Block-table columns a paged-attention call actually needs for
+    rows ending at `max_pos`: ceil((max_pos + 1) / block_size), rounded
+    up to a power of two (compile reuse — at most
+    `n_width_buckets(max_blocks)` distinct widths), capped at the full
+    table width. The single source of truth for the engine's decode AND
+    prefill table slicing, and for the benches that measure it."""
     need = max(1, (int(max_pos) + block_size) // block_size)
     width = 1
     while width < need:
         width *= 2
     return min(width, max_blocks)
+
+
+def n_width_buckets(max_blocks: int) -> int:
+    """How many distinct widths `active_block_width` can return for a
+    table of `max_blocks` columns (the pow2 ladder 1, 2, 4, ... plus
+    the cap) — the per-bucket factor in the prefill compile bound."""
+    n, width = 1, 1
+    while width < max_blocks:
+        width *= 2
+        n += 1
+    return n
 
 
 def resolve_backend(choice: str) -> Tuple[str, bool]:

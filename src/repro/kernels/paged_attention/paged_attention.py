@@ -1,28 +1,41 @@
-"""Block-sparse paged-attention decode Pallas TPU kernels.
+"""Block-sparse paged-attention Pallas TPU kernels — one chunked family.
 
-The serving decode path stores K/V in a shared pool of fixed-size token
-blocks addressed through per-slot block tables (serving/paged_kv.py).
-The jnp reference path linearizes each row's FULL table
+The serving path stores K/V in a shared pool of fixed-size token blocks
+addressed through per-slot block tables (serving/paged_kv.py). Dense
+reference semantics linearize each row's FULL table
 (`blocks_per_slot * block_size` positions) before attending, so every
-decode step pays O(max_ctx) HBM traffic per token regardless of the
-row's actual length — exactly the GPU I/O penalty TriMoE's tiering is
-built to hide.
+step pays O(max_ctx) HBM traffic per token regardless of the row's
+actual length — exactly the GPU I/O penalty TriMoE's tiering is built
+to hide.
 
 These kernels instead WALK the block table: grid dimension `j` iterates
 logical blocks, a scalar-prefetch copy of the table steers each step's
-pool DMA to the row's physical block, and `pl.when(j * bs <= pos[b])`
-skips every block past the row's length, carrying a flash-style online
+pool DMA to the row's physical block, and `pl.when` skips every block
+past the row's last needed position, carrying a flash-style online
 softmax (running max / denominator / fp32 accumulator) across the
-blocks that do run. Dead decode rows follow the trash-block contract:
-their tables point every logical block at the sentinel trash block, the
-kernel attends over its (finite) garbage, and the caller discards the
-output — no special-casing, no NaNs (block 0 always runs, so the
-denominator never collapses).
+blocks that do run.
+
+ONE kernel per arch family covers both serving phases. The query tile
+is `[rows, chunk]`: chunked SUFFIX PREFILL processes a whole chunk of
+`C` new tokens per row, with query `i` sitting at absolute position
+`past_len[row] + i` and masked causally against every key position
+(cached prefix blocks AND the chunk's own tokens, already scattered
+into the pool by the caller — write-then-attend, exactly like decode).
+DECODE is the chunk-of-1 degenerate case (`past_len = pos`,
+`lengths = 1`), exposed through thin wrappers that keep the historical
+decode signatures.
+
+Dead rows follow the trash-block contract: their tables point every
+logical block at the sentinel trash block, the kernel attends over its
+(finite) garbage, and the caller discards the output — no
+special-casing, no NaNs (block 0 always runs, and key position 0 is
+causally visible to every query, so the denominator never collapses —
+this also covers all-pad prefill rows whose `lengths` is 0).
 
 Two variants:
   * GQA — pools [N+1, bs, Kv, hd]; queries grouped per KV head so the
     MQA/GQA head-sharing reads each K/V block once per kv head;
-  * MLA — absorbed decode over the (ckv, krope) latent pool layout;
+  * MLA — absorbed attention over the (ckv, krope) latent pool layout;
     scores are q_lat . ckv + q_rope . krope and the output is the
     latent-space attention read (o_lat), with the wv_b expansion left
     to the caller (models/attention.py) exactly as in `mla_decode`.
@@ -42,8 +55,8 @@ NEG_INF = -1e30
 
 
 # ------------------------------------------------------------------- GQA
-def _gqa_kernel(tables_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
-                m_ref, l_ref, acc_ref, *, bs):
+def _gqa_kernel(tables_ref, past_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                m_ref, l_ref, acc_ref, *, bs, c, g):
     del tables_ref  # consumed by the BlockSpec index maps only
     b, j = pl.program_id(0), pl.program_id(2)
 
@@ -53,18 +66,24 @@ def _gqa_kernel(tables_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    pos = pos_ref[b]
+    past = past_ref[b]
+    last = past + len_ref[b] - 1  # the row's last real query position
 
-    # block-sparse walk: blocks wholly past the row's length never run
-    @pl.when(j * bs <= pos)
+    # block-sparse walk: blocks wholly past the row's last needed
+    # position never run; block 0 always runs so all-pad rows (last < 0)
+    # still produce a finite (discarded) output
+    @pl.when((j == 0) | (j * bs <= last))
     def _block():
-        q = q_ref[0, 0]        # [G, hd]
-        k = k_ref[0, :, 0, :]  # [bs, hd]
+        q = q_ref[0, :, 0].reshape(c * g, q_ref.shape[-1])  # [C*G, hd]
+        k = k_ref[0, :, 0, :]                               # [bs, hd]
         v = v_ref[0, :, 0, :]
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
         s *= q.shape[-1] ** -0.5
+        # causal masking at per-query absolute positions: query row
+        # r covers chunk token r // G sitting at past + r // G
         kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(kpos <= pos, s, NEG_INF)
+        qpos = past + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // g
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
         p = jnp.exp(s - m_new)
@@ -77,60 +96,82 @@ def _gqa_kernel(tables_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(j == pl.num_programs(2) - 1)
     def _done():
-        o_ref[0, 0] = (
+        o_ref[0, :, 0] = (
             acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
-        ).astype(o_ref.dtype)
+        ).reshape(c, g, o_ref.shape[-1]).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def paged_decode_gqa(
-    q: jnp.ndarray,        # [B, Kv, G, hd] one query token per row
+def paged_prefill_gqa(
+    q: jnp.ndarray,        # [B, C, Kv, G, hd] a chunk of query tokens
     pool_k: jnp.ndarray,   # [N+1, bs, Kv, hd] (last block = write trash)
     pool_v: jnp.ndarray,   # [N+1, bs, Kv, hd]
     tables: jnp.ndarray,   # [B, nb] int32 physical block per logical block
-    pos: jnp.ndarray,      # [B] int32 absolute position of the new token
+    past_len: jnp.ndarray,  # [B] int32 tokens already cached before chunk
+    lengths: jnp.ndarray,  # [B] int32 real (non-pad) tokens in the chunk
     *,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    b, kv, g, hd = q.shape
+    b, c, kv, g, hd = q.shape
     bs = pool_k.shape[1]
     nb = tables.shape[1]
-    kern = functools.partial(_gqa_kernel, bs=bs)
+    kern = functools.partial(_gqa_kernel, bs=bs, c=c, g=g)
     return pl.pallas_call(
         kern,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=3,
             grid=(b, kv, nb),
             in_specs=[
-                pl.BlockSpec((1, 1, g, hd), lambda bi, h, j, t, p: (bi, h, 0, 0)),
                 pl.BlockSpec(
-                    (1, bs, 1, hd), lambda bi, h, j, t, p: (t[bi, j], 0, h, 0)
+                    (1, c, 1, g, hd), lambda bi, h, j, t, p, n: (bi, 0, h, 0, 0)
                 ),
                 pl.BlockSpec(
-                    (1, bs, 1, hd), lambda bi, h, j, t, p: (t[bi, j], 0, h, 0)
+                    (1, bs, 1, hd), lambda bi, h, j, t, p, n: (t[bi, j], 0, h, 0)
+                ),
+                pl.BlockSpec(
+                    (1, bs, 1, hd), lambda bi, h, j, t, p, n: (t[bi, j], 0, h, 0)
                 ),
             ],
             out_specs=pl.BlockSpec(
-                (1, 1, g, hd), lambda bi, h, j, t, p: (bi, h, 0, 0)
+                (1, c, 1, g, hd), lambda bi, h, j, t, p, n: (bi, 0, h, 0, 0)
             ),
             scratch_shapes=[
-                pltpu.VMEM((g, 1), jnp.float32),
-                pltpu.VMEM((g, 1), jnp.float32),
-                pltpu.VMEM((g, hd), jnp.float32),
+                pltpu.VMEM((c * g, 1), jnp.float32),
+                pltpu.VMEM((c * g, 1), jnp.float32),
+                pltpu.VMEM((c * g, hd), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, c, kv, g, hd), q.dtype),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(jnp.asarray(tables, jnp.int32), jnp.asarray(pos, jnp.int32),
-      q, pool_k, pool_v)
+    )(jnp.asarray(tables, jnp.int32), jnp.asarray(past_len, jnp.int32),
+      jnp.asarray(lengths, jnp.int32), q, pool_k, pool_v)
+
+
+def paged_decode_gqa(
+    q: jnp.ndarray,        # [B, Kv, G, hd] one query token per row
+    pool_k: jnp.ndarray,
+    pool_v: jnp.ndarray,
+    tables: jnp.ndarray,
+    pos: jnp.ndarray,      # [B] int32 absolute position of the new token
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Decode = chunk of 1 through the chunked kernel: the query sits at
+    `pos` with everything at kpos <= pos visible, which is exactly
+    `past_len = pos, lengths = 1`."""
+    pos = jnp.asarray(pos, jnp.int32)
+    return paged_prefill_gqa(
+        q[:, None], pool_k, pool_v, tables, pos, jnp.ones_like(pos),
+        interpret=interpret,
+    )[:, 0]
 
 
 # ------------------------------------------------------------------- MLA
-def _mla_kernel(tables_ref, pos_ref, ql_ref, qr_ref, ckv_ref, kr_ref,
-                o_ref, m_ref, l_ref, acc_ref, *, bs, scale):
+def _mla_kernel(tables_ref, past_ref, len_ref, ql_ref, qr_ref, ckv_ref,
+                kr_ref, o_ref, m_ref, l_ref, acc_ref, *, bs, c, h, scale):
     del tables_ref
     b, j = pl.program_id(0), pl.program_id(1)
 
@@ -140,12 +181,13 @@ def _mla_kernel(tables_ref, pos_ref, ql_ref, qr_ref, ckv_ref, kr_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    pos = pos_ref[b]
+    past = past_ref[b]
+    last = past + len_ref[b] - 1
 
-    @pl.when(j * bs <= pos)
+    @pl.when((j == 0) | (j * bs <= last))
     def _block():
-        ql = ql_ref[0]      # [H, r]
-        qr = qr_ref[0]      # [H, rd]
+        ql = ql_ref[0].reshape(c * h, ql_ref.shape[-1])  # [C*H, r]
+        qr = qr_ref[0].reshape(c * h, qr_ref.shape[-1])  # [C*H, rd]
         ckv = ckv_ref[0]    # [bs, r]
         kr = kr_ref[0]      # [bs, rd]
         s = (
@@ -153,7 +195,8 @@ def _mla_kernel(tables_ref, pos_ref, ql_ref, qr_ref, ckv_ref, kr_ref,
             + jnp.dot(qr, kr.T, preferred_element_type=jnp.float32)
         ) * scale
         kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(kpos <= pos, s, NEG_INF)
+        qpos = past + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // h
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
         p = jnp.exp(s - m_new)
@@ -169,48 +212,74 @@ def _mla_kernel(tables_ref, pos_ref, ql_ref, qr_ref, ckv_ref, kr_ref,
     def _done():
         o_ref[0] = (
             acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
-        ).astype(o_ref.dtype)
+        ).reshape(c, h, o_ref.shape[-1]).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
-def paged_decode_mla(
-    q_lat: jnp.ndarray,      # [B, H, r] absorbed (W_k^nope-folded) queries
-    q_rope: jnp.ndarray,     # [B, H, rd]
+def paged_prefill_mla(
+    q_lat: jnp.ndarray,      # [B, C, H, r] absorbed (W_k^nope-folded)
+    q_rope: jnp.ndarray,     # [B, C, H, rd]
     pool_ckv: jnp.ndarray,   # [N+1, bs, r]
     pool_krope: jnp.ndarray,  # [N+1, bs, rd]
     tables: jnp.ndarray,     # [B, nb]
+    past_len: jnp.ndarray,   # [B]
+    lengths: jnp.ndarray,    # [B]
+    *,
+    scale: float,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, c, h, r = q_lat.shape
+    rd = q_rope.shape[-1]
+    bs = pool_ckv.shape[1]
+    nb = tables.shape[1]
+    kern = functools.partial(_mla_kernel, bs=bs, c=c, h=h, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(b, nb),
+            in_specs=[
+                pl.BlockSpec((1, c, h, r), lambda bi, j, t, p, n: (bi, 0, 0, 0)),
+                pl.BlockSpec((1, c, h, rd), lambda bi, j, t, p, n: (bi, 0, 0, 0)),
+                pl.BlockSpec(
+                    (1, bs, r), lambda bi, j, t, p, n: (t[bi, j], 0, 0)
+                ),
+                pl.BlockSpec(
+                    (1, bs, rd), lambda bi, j, t, p, n: (t[bi, j], 0, 0)
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, c, h, r), lambda bi, j, t, p, n: (bi, 0, 0, 0)
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((c * h, 1), jnp.float32),
+                pltpu.VMEM((c * h, 1), jnp.float32),
+                pltpu.VMEM((c * h, r), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, c, h, r), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(jnp.asarray(tables, jnp.int32), jnp.asarray(past_len, jnp.int32),
+      jnp.asarray(lengths, jnp.int32), q_lat, q_rope, pool_ckv, pool_krope)
+
+
+def paged_decode_mla(
+    q_lat: jnp.ndarray,      # [B, H, r]
+    q_rope: jnp.ndarray,     # [B, H, rd]
+    pool_ckv: jnp.ndarray,
+    pool_krope: jnp.ndarray,
+    tables: jnp.ndarray,
     pos: jnp.ndarray,        # [B]
     *,
     scale: float,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    b, h, r = q_lat.shape
-    rd = q_rope.shape[-1]
-    bs = pool_ckv.shape[1]
-    nb = tables.shape[1]
-    kern = functools.partial(_mla_kernel, bs=bs, scale=scale)
-    return pl.pallas_call(
-        kern,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
-            grid=(b, nb),
-            in_specs=[
-                pl.BlockSpec((1, h, r), lambda bi, j, t, p: (bi, 0, 0)),
-                pl.BlockSpec((1, h, rd), lambda bi, j, t, p: (bi, 0, 0)),
-                pl.BlockSpec((1, bs, r), lambda bi, j, t, p: (t[bi, j], 0, 0)),
-                pl.BlockSpec((1, bs, rd), lambda bi, j, t, p: (t[bi, j], 0, 0)),
-            ],
-            out_specs=pl.BlockSpec((1, h, r), lambda bi, j, t, p: (bi, 0, 0)),
-            scratch_shapes=[
-                pltpu.VMEM((h, 1), jnp.float32),
-                pltpu.VMEM((h, 1), jnp.float32),
-                pltpu.VMEM((h, r), jnp.float32),
-            ],
-        ),
-        out_shape=jax.ShapeDtypeStruct((b, h, r), jnp.float32),
-        compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "arbitrary"),
-        ),
-        interpret=interpret,
-    )(jnp.asarray(tables, jnp.int32), jnp.asarray(pos, jnp.int32),
-      q_lat, q_rope, pool_ckv, pool_krope)
+    """Absorbed MLA decode = chunk of 1 through the chunked kernel."""
+    pos = jnp.asarray(pos, jnp.int32)
+    return paged_prefill_mla(
+        q_lat[:, None], q_rope[:, None], pool_ckv, pool_krope, tables,
+        pos, jnp.ones_like(pos), scale=scale, interpret=interpret,
+    )[:, 0]

@@ -1,10 +1,19 @@
-"""Pure-jnp oracles for the paged decode-attention kernels.
+"""Pure-jnp oracles for the paged-attention kernels.
 
-Dense-gather semantics: linearize each row's blocks by table, mask
-positions past the row's length, exact softmax. These are both the
-numerics oracle for the Pallas kernels (tests/test_paged_attention_
-kernel.py) and the O(max_ctx) baseline the block-sparse kernel is
-benchmarked against (benchmarks/kernel_bench.py).
+Dense-gather semantics: linearize each row's blocks by table, mask key
+positions causally against each query's absolute position, exact
+softmax. These are both the numerics oracle for the Pallas kernels
+(tests/test_paged_attention_kernel.py) and the O(max_ctx) baseline the
+block-sparse kernels are benchmarked against
+(benchmarks/kernel_bench.py).
+
+Like the kernels, one chunked family covers both phases: the prefill
+oracles take a `[rows, chunk]` query tile with per-row `past_len`
+(query i sits at `past_len + i`), and the decode oracles are the
+chunk-of-1 wrappers. Pad queries (beyond a row's real `lengths`) get a
+well-defined finite output the caller discards; only the causal
+position mask — not `lengths` — shapes real queries' attention, which
+is what makes decode literally `past_len = pos, lengths = 1`.
 """
 from __future__ import annotations
 
@@ -23,33 +32,63 @@ def linearize_blocks(pool: jnp.ndarray, tables: jnp.ndarray) -> jnp.ndarray:
     return g.reshape(g.shape[0], g.shape[1] * g.shape[2], *g.shape[3:])
 
 
-def paged_decode_gqa_ref(q, pool_k, pool_v, tables, pos):
-    """q: [B, Kv, G, hd]; pools [N+1, bs, Kv, hd]; tables [B, nb];
-    pos [B] -> [B, Kv, G, hd]."""
+def _qpos(past_len: jnp.ndarray, c: int) -> jnp.ndarray:
+    """[B, C] absolute position of each chunk query."""
+    return jnp.asarray(past_len, jnp.int32)[:, None] + jnp.arange(
+        c, dtype=jnp.int32
+    )[None, :]
+
+
+def paged_prefill_gqa_ref(q, pool_k, pool_v, tables, past_len, lengths=None):
+    """q: [B, C, Kv, G, hd]; pools [N+1, bs, Kv, hd]; tables [B, nb];
+    past_len [B] -> [B, C, Kv, G, hd]. `lengths` is accepted for kernel
+    signature parity; real queries depend only on the position mask."""
+    del lengths
     keys = linearize_blocks(pool_k, tables)   # [B, S, Kv, hd]
     vals = linearize_blocks(pool_v, tables)
     scale = q.shape[-1] ** -0.5
-    s = jnp.einsum("bkgd,bskd->bkgs", q, keys).astype(jnp.float32) * scale
-    valid = jnp.arange(keys.shape[1])[None, :] <= pos[:, None]
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    s = jnp.einsum("bckgd,bskd->bckgs", q, keys).astype(jnp.float32) * scale
+    valid = (
+        jnp.arange(keys.shape[1])[None, None, :]
+        <= _qpos(past_len, q.shape[1])[:, :, None]
+    )  # [B, C, S]
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bkgs,bskd->bkgd", p.astype(vals.dtype), vals)
+    return jnp.einsum("bckgs,bskd->bckgd", p.astype(vals.dtype), vals)
+
+
+def paged_decode_gqa_ref(q, pool_k, pool_v, tables, pos):
+    """q: [B, Kv, G, hd]; pos [B] -> [B, Kv, G, hd] (chunk-of-1)."""
+    return paged_prefill_gqa_ref(q[:, None], pool_k, pool_v, tables, pos)[:, 0]
+
+
+def paged_prefill_mla_ref(q_lat, q_rope, pool_ckv, pool_krope, tables,
+                          past_len, lengths=None, *, scale):
+    """q_lat: [B, C, H, r]; q_rope: [B, C, H, rd]; latent pools
+    [N+1, bs, r|rd]; past_len [B] -> o_lat [B, C, H, r] (fp32)."""
+    del lengths
+    ckv = linearize_blocks(pool_ckv, tables)      # [B, S, r]
+    krope = linearize_blocks(pool_krope, tables)  # [B, S, rd]
+    s = (
+        jnp.einsum("bchr,btr->bcht", q_lat, ckv,
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bchr,btr->bcht", q_rope, krope,
+                     preferred_element_type=jnp.float32)
+    ) * scale
+    valid = (
+        jnp.arange(ckv.shape[1])[None, None, :]
+        <= _qpos(past_len, q_lat.shape[1])[:, :, None]
+    )  # [B, C, S]
+    s = jnp.where(valid[:, :, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bcht,btr->bchr", p, ckv.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
 
 
 def paged_decode_mla_ref(q_lat, q_rope, pool_ckv, pool_krope, tables, pos,
                          *, scale):
-    """q_lat: [B, H, r]; q_rope: [B, H, rd]; latent pools [N+1, bs, r|rd];
-    tables [B, nb]; pos [B] -> o_lat [B, H, r] (fp32)."""
-    ckv = linearize_blocks(pool_ckv, tables)      # [B, S, r]
-    krope = linearize_blocks(pool_krope, tables)  # [B, S, rd]
-    s = (
-        jnp.einsum("bhr,btr->bht", q_lat, ckv,
-                   preferred_element_type=jnp.float32)
-        + jnp.einsum("bhr,btr->bht", q_rope, krope,
-                     preferred_element_type=jnp.float32)
-    ) * scale
-    valid = jnp.arange(ckv.shape[1])[None, :] <= pos[:, None]
-    s = jnp.where(valid[:, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bht,btr->bhr", p, ckv.astype(jnp.float32),
-                      preferred_element_type=jnp.float32)
+    """Chunk-of-1 wrapper: o_lat [B, H, r] (fp32)."""
+    return paged_prefill_mla_ref(
+        q_lat[:, None], q_rope[:, None], pool_ckv, pool_krope, tables,
+        pos, scale=scale,
+    )[:, 0]

@@ -177,24 +177,19 @@ def _seq_parallel_attention(q, k, v, *, q_chunk: int):
 
 # ------------------------------------------------------------------- GQA
 def gqa_forward(p: Params, cfg, x, positions, *, kv_override=None, causal=True,
-                token_mask=None, past=None):
+                token_mask=None):
     """Full-sequence attention (train / prefill / encoder / cross).
 
     `token_mask` [B, S] bool marks real tokens (bucketed masked prefill):
     pad positions are excluded as KEYS, so real queries never attend to
     padding; outputs at pad query positions are unspecified.
 
-    `past` = (past_k, past_v, past_valid) enables SUFFIX-ONLY prefill
-    against a cached context (paged KV / prefix cache): past_k/past_v
-    [B, P, Kv, hd] are already-roped cache entries gathered by block
-    table, past_valid [B, P] marks each row's real prefix length, and
-    `positions` must carry each row's ABSOLUTE positions [B, S]
-    (past_len + arange). Every real query may attend every valid past
-    key (the prefix is strictly older), so the causal iota base P from
-    Sk = P + S composes correctly with per-row prefix lengths.
+    Suffix-only prefill against a cached paged context goes through
+    `gqa_prefill_paged` (the chunked block-sparse path — decode shares
+    the same kernel at chunk 1), not this function.
 
-    Returns (out, (k, v)) — the NEW tokens' k/v in [B, S, Kv, hd]
-    layout for caching (past entries are never recomputed).
+    Returns (out, (k, v)) — the tokens' k/v in [B, S, Kv, hd] layout
+    for caching.
     """
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     if kv_override is None:
@@ -208,18 +203,7 @@ def gqa_forward(p: Params, cfg, x, positions, *, kv_override=None, causal=True,
         k, v = kv_override
         if "bq" in p:
             q = q + p["bq"]
-    if past is None:
-        out = _grouped_attention(q, k, v, causal=causal, valid=token_mask)
-    else:
-        past_k, past_v, past_valid = past
-        b, s = x.shape[0], x.shape[1]
-        new_valid = (
-            jnp.ones((b, s), bool) if token_mask is None else token_mask
-        )
-        k_full = jnp.concatenate([past_k, k], axis=1)
-        v_full = jnp.concatenate([past_v, v], axis=1)
-        valid = jnp.concatenate([past_valid, new_valid], axis=1)
-        out = _grouped_attention(q, k_full, v_full, causal=causal, valid=valid)
+    out = _grouped_attention(q, k, v, causal=causal, valid=token_mask)
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (k, v)
 
 
@@ -254,7 +238,7 @@ def gqa_decode(p: Params, cfg, x, cache_k, cache_v, pos):
 
 
 # ------------------------------------------------------------------- MLA
-def mla_forward(p: Params, cfg, x, positions, *, token_mask=None, past=None):
+def mla_forward(p: Params, cfg, x, positions, *, token_mask=None):
     """Full-sequence MLA (train / prefill). `token_mask` as in
     gqa_forward: pad keys masked for bucketed masked prefill.
 
@@ -264,17 +248,13 @@ def mla_forward(p: Params, cfg, x, positions, *, token_mask=None, past=None):
     shard_map KV gather moves ckv/krope (~150 MB/layer) instead of the
     expanded per-head K/V (~4.3 GB/layer).
 
-    `past` = (past_ckv [B, P, r], past_krope [B, P, rd], past_valid
-    [B, P]) enables suffix-only prefill against cached latents (paged
-    KV / prefix cache): past latents are re-expanded through wkv_b —
-    the same computation the cold path applies to its own latents — and
-    `positions` must be per-row absolute [B, S]. Standard path only.
+    Suffix-only prefill against cached paged latents goes through
+    `mla_prefill_paged` (the absorbed chunked path — decode shares the
+    same kernel at chunk 1), not this function.
 
-    Returns (out, (ckv, krope)) — the NEW tokens' compressed cache
-    entries.
+    Returns (out, (ckv, krope)) — the tokens' compressed cache entries.
     """
     m = cfg.mla
-    h = cfg.n_heads
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
@@ -282,32 +262,6 @@ def mla_forward(p: Params, cfg, x, positions, *, token_mask=None, past=None):
     kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
     ckv, krope = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
     krope = apply_rope(krope[:, :, None, :], positions, cfg.rope_theta)  # [B,S,1,rd]
-
-    if past is not None:
-        past_ckv, past_krope, past_valid = past
-        b, s = x.shape[0], x.shape[1]
-        ckv_full = jnp.concatenate([past_ckv, ckv], axis=1)
-        krope_full = jnp.concatenate(
-            [past_krope[:, :, None, :], krope], axis=1
-        )
-        new_valid = (
-            jnp.ones((b, s), bool) if token_mask is None else token_mask
-        )
-        valid = jnp.concatenate([past_valid, new_valid], axis=1)
-        kvb = jnp.einsum("bsr,rhk->bshk", ckv_full, p["wkv_b"])
-        k_nope, v = jnp.split(kvb, [m.qk_nope_head_dim], axis=-1)
-        k = jnp.concatenate(
-            [k_nope,
-             jnp.broadcast_to(krope_full,
-                              (*k_nope.shape[:3], m.qk_rope_head_dim))],
-            axis=-1,
-        )
-        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
-        out = _grouped_attention(qf, k, v, causal=True, valid=valid)
-        return (
-            jnp.einsum("bshk,hkd->bsd", out, p["wo"]),
-            (ckv, krope[:, :, 0, :]),
-        )
 
     if _SEQ_PARALLEL is not None:
         wk_b, wv_b = jnp.split(p["wkv_b"], [m.qk_nope_head_dim], axis=-1)
@@ -385,7 +339,7 @@ def mla_decode(p: Params, cfg, x, cache_ckv, cache_krope, pos):
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), cache_ckv, cache_krope
 
 
-# --------------------------------------------- paged (block-table) decode
+# ----------------------------------------- paged (block-table) attention
 def _paged_backend(cfg, backend):
     """Resolve the paged decode-attention backend: an explicit `backend`
     overrides `cfg.paged_attn_backend` ("auto" = Pallas kernel on TPU,
@@ -414,6 +368,22 @@ def _paged_write(pool, tables, pos, val):
     rows = jnp.arange(tables.shape[0])
     bid = tables[rows, pos // bs]
     return pool.at[bid, pos % bs].set(val)
+
+
+def paged_scatter(pool, tables, gpos, mask, val):
+    """Scatter a CHUNK of new-token seq entries into block pools.
+
+    pool [N+1, bs, ...]; tables [W, nb]; gpos [W, C] global positions
+    (past_len + i); mask [W, C] real tokens; val [W, C, ...]. Masked
+    (pad) positions write to the trash block (last pool row), so a
+    right-padded chunk never pollutes a live block — the chunk-width
+    generalization of `_paged_write`'s dead-row contract."""
+    bs = pool.shape[1]
+    trash = pool.shape[0] - 1
+    lb = jnp.minimum(gpos // bs, tables.shape[1] - 1)
+    bid = jnp.take_along_axis(tables, lb, axis=1)  # [W, C]
+    bid = jnp.where(mask, bid, trash)
+    return pool.at[bid, gpos % bs].set(val)
 
 
 def gqa_decode_paged(p: Params, cfg, x, pool_k, pool_v, tables, pos,
@@ -513,6 +483,114 @@ def mla_decode_paged(p: Params, cfg, x, pool_ckv, pool_krope, tables, pos,
         pattn = jax.nn.softmax(s, axis=-1)
         o_lat = jnp.einsum("bhst,btr->bshr", pattn, cache_ckv,
                            preferred_element_type=jnp.float32)
+    o = jnp.einsum("bshr,rhk->bshk", o_lat, wv_b,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), pool_ckv, pool_krope
+
+
+# -------------------------------------------- paged chunked suffix prefill
+def gqa_prefill_paged(p: Params, cfg, x, pool_k, pool_v, tables, past_len,
+                      positions, token_mask, backend=None):
+    """Chunked suffix prefill against the paged cache — the same
+    write-then-attend contract as `gqa_decode_paged`, widened to a
+    `[rows, chunk]` query tile (decode is this path at chunk 1).
+
+    x: [W, C, D] — each row's uncached-suffix chunk, right-padded;
+    pool_k/pool_v: [N+1, bs, Kv, hd]; tables: [W, nb] block tables
+    SLICED by the caller to the pow2 active width covering every row's
+    prefix + suffix end; past_len: [W] tokens already cached before the
+    chunk; positions: [W, C] absolute positions (past_len + arange);
+    token_mask: [W, C] real tokens (None = all real).
+
+    The chunk's K/V is scattered into its rows' blocks first (pads to
+    the trash block), then attention walks each row's blocks with
+    per-query causal masking — the cached prefix AND the chunk's own
+    earlier tokens are both just pool reads, which is what makes the
+    path identical for cold admission, prefix-hit suffixes, and
+    mid-prompt piggyback chunks. `backend` as in `gqa_decode_paged`.
+
+    Returns (out [W, C, D], pool_k, pool_v).
+    """
+    b, c, _ = x.shape
+    past_len = jnp.asarray(past_len, jnp.int32)
+    mask = (
+        jnp.ones((b, c), bool) if token_mask is None
+        else jnp.asarray(token_mask, bool)
+    )
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    pool_k = paged_scatter(pool_k, tables, positions, mask, k)
+    pool_v = paged_scatter(pool_v, tables, positions, mask, v)
+    lengths = mask.sum(-1).astype(jnp.int32)
+    kvh = pool_k.shape[2]
+    qk = q.reshape(b, c, kvh, q.shape[2] // kvh, q.shape[3])
+    kind, interpret = _paged_backend(cfg, backend)
+    if kind == "pallas":
+        from repro.kernels.paged_attention import paged_prefill_gqa
+
+        out = paged_prefill_gqa(
+            qk, pool_k, pool_v, tables, past_len, lengths,
+            interpret=interpret,
+        )
+    else:
+        from repro.kernels.paged_attention import paged_prefill_gqa_ref
+
+        out = paged_prefill_gqa_ref(qk, pool_k, pool_v, tables, past_len)
+    out = out.reshape(b, c, q.shape[2], q.shape[3]).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), pool_k, pool_v
+
+
+def mla_prefill_paged(p: Params, cfg, x, pool_ckv, pool_krope, tables,
+                      past_len, positions, token_mask, backend=None):
+    """Absorbed chunked MLA suffix prefill against paged latent pools —
+    `mla_decode_paged` widened to a `[rows, chunk]` query tile, same
+    fp32 accumulation and latent-space value read (wv_b expansion out
+    here). Arguments as in `gqa_prefill_paged` with pools
+    [N+1, bs, r | rope_dim]. Returns (out [W, C, D], pools)."""
+    m = cfg.mla
+    b, c, _ = x.shape
+    past_len = jnp.asarray(past_len, jnp.int32)
+    mask = (
+        jnp.ones((b, c), bool) if token_mask is None
+        else jnp.asarray(token_mask, bool)
+    )
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    ckv_new, krope_new = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
+    krope_new = apply_rope(
+        krope_new[:, :, None, :], positions, cfg.rope_theta
+    )[:, :, 0, :]
+    pool_ckv = paged_scatter(pool_ckv, tables, positions, mask, ckv_new)
+    pool_krope = paged_scatter(pool_krope, tables, positions, mask, krope_new)
+    lengths = mask.sum(-1).astype(jnp.int32)
+
+    wk_b, wv_b = jnp.split(p["wkv_b"], [m.qk_nope_head_dim], axis=-1)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, wk_b,
+                       preferred_element_type=jnp.float32)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    kind, interpret = _paged_backend(cfg, backend)
+    if kind == "pallas":
+        from repro.kernels.paged_attention import paged_prefill_mla
+
+        o_lat = paged_prefill_mla(
+            q_lat, q_rope.astype(jnp.float32), pool_ckv, pool_krope,
+            tables, past_len, lengths, scale=scale, interpret=interpret,
+        )
+    else:
+        from repro.kernels.paged_attention import paged_prefill_mla_ref
+
+        o_lat = paged_prefill_mla_ref(
+            q_lat, q_rope.astype(jnp.float32), pool_ckv, pool_krope,
+            tables, past_len, scale=scale,
+        )
     o = jnp.einsum("bshr,rhk->bshk", o_lat, wv_b,
                    preferred_element_type=jnp.float32).astype(x.dtype)
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), pool_ckv, pool_krope

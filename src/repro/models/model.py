@@ -206,8 +206,8 @@ def apply_layer(
     tiered_state: Params | None = None,
     cold_capacity_frac: float = 0.25,
     token_mask: jnp.ndarray | None = None,  # [B, S] valid-token mask
-    paged_tables: jnp.ndarray | None = None,  # [B, nb] decode block tables
-    past: Params | None = None,  # full mode: gathered prefix K/V + valid
+    paged_tables: jnp.ndarray | None = None,  # [B, nb] block tables
+    paged_past_len: jnp.ndarray | None = None,  # [B] cached prefix lengths
 ):
     """Returns (x, aux_loss, expert_counts, new_cache).
 
@@ -222,12 +222,15 @@ def apply_layer(
     state through pad steps, so the returned caches match an unpadded
     forward of each row's real prefix.
 
-    Paged KV (serving/paged_kv.py): in decode mode, `paged_tables`
-    switches attention to the block-pool cache — `cache` then carries
-    POOL leaves ([N+1, bs, ...]) for k/v/ckv/krope and per-row leaves
-    for recurrent state. In full mode, `past` carries each row's
-    gathered prefix ({"k","v","valid"} or {"ckv","krope","valid"}) for
-    suffix-only prefill; returned seq leaves are the NEW tokens' only.
+    Paged KV (serving/paged_kv.py): `paged_tables` switches attention
+    to the block-pool cache — `cache` then carries POOL leaves
+    ([N+1, bs, ...]) for k/v/ckv/krope and per-row leaves for recurrent
+    state. Decode and full mode share ONE block-sparse paged-attention
+    path (kernels/paged_attention — decode is the chunk-of-1 case): in
+    full mode the chunk's K/V is scattered into the rows' blocks and
+    attention walks each row's table with per-query causal masking
+    against `paged_past_len` cached prefix tokens; returned seq leaves
+    are the UPDATED POOLS.
     """
     mixer, ffn = sig
     e = cfg.moe.n_experts if cfg.moe is not None else 1
@@ -238,21 +241,33 @@ def apply_layer(
     fmask = token_mask if mode == "full" else None  # [B, S] prefill mask
     h = rmsnorm(p["norm1"], x, cfg.norm_eps)
     if mixer in ("attn", "mla"):
-        if mode == "full":
+        if mode == "full" and paged_tables is not None:
+            # chunked suffix prefill: write the chunk's K/V into the
+            # rows' blocks, then block-sparse paged attention (shared
+            # with decode = chunk of 1)
+            if mixer == "attn":
+                y, pk, pv = attn.gqa_prefill_paged(
+                    p["mixer"], cfg, h, cache["k"], cache["v"],
+                    paged_tables, paged_past_len, positions, fmask,
+                )
+                new_cache.update(k=pk, v=pv)
+            else:
+                y, pc, pk = attn.mla_prefill_paged(
+                    p["mixer"], cfg, h, cache["ckv"], cache["krope"],
+                    paged_tables, paged_past_len, positions, fmask,
+                )
+                new_cache.update(ckv=pc, krope=pk)
+        elif mode == "full":
             if mixer == "attn":
                 y, (k, v) = attn.gqa_forward(
                     p["mixer"], cfg, h, positions, causal=causal,
                     token_mask=fmask,
-                    past=None if past is None
-                    else (past["k"], past["v"], past["valid"]),
                 )
                 if cache is not None:
                     new_cache.update(k=k, v=v)
             else:
                 y, (ckv, krope) = attn.mla_forward(
                     p["mixer"], cfg, h, positions, token_mask=fmask,
-                    past=None if past is None
-                    else (past["ckv"], past["krope"], past["valid"]),
                 )
                 if cache is not None:
                     new_cache.update(ckv=ckv, krope=krope)
@@ -617,20 +632,6 @@ def decode_step(
 SEQ_CACHE_KEYS = frozenset({"k", "v", "ckv", "krope"})
 
 
-def _scatter_suffix(pool, tables, gpos, mask, val):
-    """Scatter new-token seq entries into block pools.
-
-    pool [N+1, bs, ...]; tables [W, nb]; gpos [W, S] global positions
-    (past_len + i); mask [W, S] real tokens; val [W, S, ...]. Masked
-    positions write to the trash block (last pool row)."""
-    bs = pool.shape[1]
-    trash = pool.shape[0] - 1
-    lb = jnp.minimum(gpos // bs, tables.shape[1] - 1)
-    bid = jnp.take_along_axis(tables, lb, axis=1)  # [W, S]
-    bid = jnp.where(mask, bid, trash)
-    return pool.at[bid, gpos % bs].set(val)
-
-
 def decode_step_paged(
     params: Params,
     cfg: ModelConfig,
@@ -732,19 +733,26 @@ def prefill_paged(
     tiered: Params | None = None,
     cold_capacity_frac: float = 0.25,
 ):
-    """Suffix-only masked prefill against the paged cache.
+    """Suffix-only masked prefill against the paged cache — one chunk
+    of the CHUNKED paged-attention path (decode is the chunk-of-1 case
+    of the same kernels).
 
-    batch["tokens"] [W, S] carries each row's UNCACHED suffix, right-
-    padded to a bucket width and masked by `token_mask`; `past_len` [W]
-    is the prefix length already present in the cache (0 for cold
-    admissions); tables [W, nb] are the rows' block tables covering
-    prefix + suffix. Attention layers gather the prefix K/V from the
-    pools (full fixed width nb*bs, masked by past_len — one compile per
-    suffix bucket) and compute only the suffix rows; new K/V is
-    scattered into the suffix blocks. Rows with past_len > 0 require an
-    attention-only arch (recurrent state cannot be reconstructed from a
-    token-keyed prefix — serving/paged_kv.py gates this); recurrent
-    layers run the ordinary masked forward and return per-row state.
+    batch["tokens"] [W, S] carries each row's UNCACHED suffix chunk,
+    right-padded to a bucket width and masked by `token_mask`;
+    `past_len` [W] is the token count already present in the cache
+    before this chunk (0 for cold admissions; a prefix-cache hit or the
+    previous piggyback chunk otherwise); tables [W, nbw] are the rows'
+    block tables, SLICED by the caller to the pow2 active width
+    covering prefix + suffix (engine.prefill_slots_paged) — one compile
+    per (suffix bucket, table-width bucket). Attention layers scatter
+    the chunk's K/V into its blocks and walk the tables block-sparsely
+    with per-query causal masking (attn.gqa/mla_prefill_paged) — the
+    cached prefix is never dense-gathered at full table width. Rows
+    with past_len > 0 require an attention-only arch (recurrent state
+    cannot be reconstructed from a token-keyed prefix —
+    serving/paged_kv.py and the loop's chunked_prefill gate this);
+    recurrent layers run the ordinary masked forward and return per-row
+    state.
 
     Returns (last_real_token_logits [W, V], new_pools, new_states).
     """
@@ -756,31 +764,19 @@ def prefill_paged(
     past_len = jnp.asarray(past_len, jnp.int32)
     tables = jnp.asarray(tables, jnp.int32)
     positions = past_len[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
-    gpos = positions  # global positions of the suffix tokens
-
-    def gather_past(pool_l):
-        """Linearized per-row prefix ({k,v}|{ckv,krope} + valid) from
-        the pools; width is the full slot capacity nb*bs."""
-        out = {
-            k: attn.paged_gather(v, tables) for k, v in pool_l.items()
-        }
-        width = next(iter(out.values())).shape[1]
-        out["valid"] = jnp.arange(width)[None, :] < past_len[:, None]
-        return out
 
     def run_layer(p, sig, x, cache_pools, ts):
         mixer, _ = sig
         is_attn = mixer in ("attn", "mla")
-        past = gather_past(cache_pools) if is_attn else None
         x, _, _, nc = apply_layer(
-            cfg, sig, p, x, positions, mode="full", cache={},
+            cfg, sig, p, x, positions, mode="full",
+            cache=cache_pools if is_attn else {},
             tiered_state=ts, cold_capacity_frac=cold_capacity_frac,
-            token_mask=token_mask, past=past,
+            token_mask=token_mask,
+            paged_tables=tables if is_attn else None,
+            paged_past_len=past_len if is_attn else None,
         )
-        new_pool = {
-            k: _scatter_suffix(cache_pools[k], tables, gpos, token_mask, v)
-            for k, v in nc.items() if k in SEQ_CACHE_KEYS
-        }
+        new_pool = {k: v for k, v in nc.items() if k in SEQ_CACHE_KEYS}
         new_state = {k: v for k, v in nc.items() if k not in SEQ_CACHE_KEYS}
         return x, new_pool, new_state
 

@@ -81,6 +81,10 @@ class Request:
 class BatchSlot:
     request: Optional[Request] = None
     pos: int = 0  # absolute decode position
+    # chunked piggyback prefill (ServingLoop): the request is admitted
+    # but its prompt is still streaming into the cache chunk-by-chunk —
+    # the slot must sit OUT of decode groups until the prefill lands
+    prefilling: bool = False
 
 
 class ZigzagBatcher:
@@ -121,6 +125,7 @@ class ZigzagBatcher:
         i = next(j for j, s in enumerate(self.slots) if s.request is None)
         self.slots[i].request = req
         self.slots[i].pos = len(req.prompt)
+        self.slots[i].prefilling = False
         self._enqueued_at.pop(id(req), None)
         filled.append(i)
 
@@ -182,6 +187,7 @@ class ZigzagBatcher:
             if s.request is not None and s.request.done:
                 self.completed.append(s.request)
                 s.request = None
+                s.prefilling = False
                 freed.append(i)
         return freed
 
@@ -202,8 +208,10 @@ class ZigzagBatcher:
 
         Unlike next_batch, dead slots stay in the batch (tokens/pos 0,
         live False) so the jitted decode step compiles once per group
-        width; callers mask with `live` when recording. Advances the
-        rotation; returns None when the whole group is idle.
+        width; callers mask with `live` when recording. Slots still
+        mid-prefill (chunked piggyback admission) are dead too — their
+        cache rows are incomplete until the last chunk lands. Advances
+        the rotation; returns None when the whole group is idle.
         """
         g = self.active_group()
         idxs = self.group_slots(g)
@@ -213,7 +221,7 @@ class ZigzagBatcher:
         live = np.zeros((len(idxs),), bool)
         for row, i in enumerate(idxs):
             r = self.slots[i].request
-            if r is None or r.done:
+            if r is None or r.done or self.slots[i].prefilling:
                 continue
             toks[row, 0] = r.generated[-1] if r.generated else int(r.prompt[-1])
             pos[row] = self.slots[i].pos

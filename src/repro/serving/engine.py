@@ -233,8 +233,10 @@ class TriMoEServingEngine:
 
         self._prefill_paged = jax.jit(prefill_paged_fn)
         self.prefill_rows = prefill_rows
-        self._prefill_shapes = set()  # (rows, width) fallback compile count
+        # (rows, bucket width, table width) fallback compile count
+        self._prefill_shapes = set()
         self.decode_table_widths = set()  # distinct sliced widths (pow2)
+        self.prefill_table_widths = set()  # paged prefill's sliced widths
         self._migrate = jax.jit(apply_migrations)
         self._layer_keys = self._flatten_layer_keys()
 
@@ -339,7 +341,7 @@ class TriMoEServingEngine:
         assert len(slot_indices) == n and lengths.shape == (n,)
         assert np.all(lengths <= width) and np.all(lengths > 0)
         r = self.prefill_rows
-        self._prefill_shapes.add((r, width))
+        self._prefill_shapes.add((r, width, 0))
         out = []
         for c0 in range(0, n, r):
             nr = min(r, n - c0)
@@ -405,17 +407,27 @@ class TriMoEServingEngine:
         return logits, counts
 
     def prefill_slots_paged(self, suffixes, slot_indices, lengths, past_len):
-        """Suffix-only masked prefill into paged slots.
+        """Chunked suffix-only masked prefill into paged slots.
 
-        suffixes: [W, S] int32 — each row's UNCACHED prompt suffix,
-        right-padded to a shared bucket width; lengths [W] real suffix
-        lengths; past_len [W] cached prefix lengths (0 = cold). The
-        rows' block tables must already cover prefix + suffix
-        (PagedKVCache.admit_slot). Rows are padded to `prefill_rows`
-        (excess chunked) so the jit compiles one (prefill_rows, width)
-        shape per bucket — the same compile bound as `prefill_slots`.
+        suffixes: [W, S] int32 — each row's UNCACHED prompt suffix (or
+        one piggyback chunk of it), right-padded to a shared bucket
+        width; lengths [W] real suffix lengths; past_len [W] tokens
+        already cached before the chunk (0 = cold admission; prefix hit
+        or earlier chunks otherwise). The rows' block tables must
+        already cover prefix + suffix (PagedKVCache.admit_slot).
+
+        Block tables are SLICED to the pow2-bucketed active width
+        covering the furthest row end (prefix + suffix — the prefill
+        analogue of `step_slots_paged`'s decode slicing), so past-K/V
+        attention reads O(active blocks), not O(blocks_per_slot). Rows
+        are padded to `prefill_rows` (excess chunked) so the jit
+        compiles one (prefill_rows, bucket width, table width) shape —
+        at most len(bucket_table) x n_width_buckets(blocks_per_slot)
+        compiles (`prefill_compiles`, gated in CI).
         Returns per-row last-real-token logits [W, V].
         """
+        from repro.kernels.paged_attention import active_block_width
+
         assert isinstance(self.kv, PagedKVCache)
         suffixes = np.asarray(suffixes, np.int32)
         lengths = np.asarray(lengths, np.int32)
@@ -424,20 +436,23 @@ class TriMoEServingEngine:
         assert len(slot_indices) == n
         assert np.all(lengths > 0) and np.all(lengths <= width)
         r = self.prefill_rows
-        self._prefill_shapes.add((r, width))
         out = []
         for c0 in range(0, n, r):
             nr = min(r, n - c0)
+            end = int((past_len[c0:c0 + nr] + lengths[c0:c0 + nr]).max())
+            tw = active_block_width(
+                end - 1, self.kv.block_size, max(1, self.kv.blocks_per_slot)
+            )
+            self.prefill_table_widths.add(tw)
+            self._prefill_shapes.add((r, width, tw))
             toks = np.zeros((r, width), np.int32)
             lens = np.zeros((r,), np.int32)  # dummy rows: all-pad mask
             past = np.zeros((r,), np.int32)
-            tables = np.full(
-                (r, self.kv.blocks_per_slot), self.kv.trash, np.int32
-            )
+            tables = np.full((r, tw), self.kv.trash, np.int32)
             toks[:nr] = suffixes[c0:c0 + nr]
             lens[:nr] = lengths[c0:c0 + nr]
             past[:nr] = past_len[c0:c0 + nr]
-            tables[:nr] = self.kv.table_rows(slot_indices[c0:c0 + nr])
+            tables[:nr] = self.kv.table_rows(slot_indices[c0:c0 + nr])[:, :tw]
             logits, self.kv.pools, row_states = self._prefill_paged(
                 self.params, jnp.asarray(toks), jnp.asarray(lens),
                 jnp.asarray(past), jnp.asarray(tables), self.kv.pools,
@@ -455,9 +470,12 @@ class TriMoEServingEngine:
 
     @property
     def prefill_compiles(self) -> int:
-        """Distinct jit compiles of the bucketed masked prefill (slot +
-        paged variants) — the quantity the CI compile-count gate bounds
-        by len(bucket_table)."""
+        """Distinct jit compiles of the bucketed masked prefill across
+        BOTH variants — the contiguous slot path (bounded by
+        len(bucket_table)) and the paged/chunked path (bounded by
+        len(bucket_table) x n_width_buckets(blocks_per_slot), the
+        table-width slicing factor) — the quantity the CI compile-count
+        gate bounds (benchmarks/serving_bench.py)."""
         try:
             return int(
                 self._prefill_masked._cache_size()

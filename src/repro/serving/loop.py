@@ -57,11 +57,16 @@ class LoopStats:
     completed: int = 0
     decode_steps: int = 0  # group steps that ran the engine
     idle_steps: int = 0  # group rotations that found the group empty
+    prefill_chunks: int = 0  # budgeted piggyback chunk calls
     generated_tokens: int = 0  # sampled tokens (prefill firsts + decode)
     wall_s: float = 0.0
     util_sum: float = 0.0
     util_samples: int = 0
     latencies_s: List[float] = dataclasses.field(default_factory=list)
+    # per-request time-to-first-token (submit -> first sampled token)
+    ttft_s: List[float] = dataclasses.field(default_factory=list)
+    # inter-token latency: gap between a request's consecutive tokens
+    itl_s: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def tokens_per_s(self) -> float:
@@ -75,6 +80,26 @@ class LoopStats:
     def mean_latency_s(self) -> float:
         return float(np.mean(self.latencies_s)) if self.latencies_s else 0.0
 
+    @staticmethod
+    def _pct(xs: List[float], q: float) -> float:
+        return float(np.percentile(xs, q)) if xs else 0.0
+
+    @property
+    def ttft_p50_s(self) -> float:
+        return self._pct(self.ttft_s, 50)
+
+    @property
+    def ttft_p95_s(self) -> float:
+        return self._pct(self.ttft_s, 95)
+
+    @property
+    def itl_p50_s(self) -> float:
+        return self._pct(self.itl_s, 50)
+
+    @property
+    def itl_p95_s(self) -> float:
+        return self._pct(self.itl_s, 95)
+
     def summary(self) -> str:
         return (
             f"{self.completed}/{self.admitted} requests, "
@@ -82,8 +107,22 @@ class LoopStats:
             f"({self.tokens_per_s:.1f} tok/s), "
             f"util={self.mean_utilization:.2f}, "
             f"mean_latency={self.mean_latency_s * 1e3:.0f}ms, "
-            f"decode_steps={self.decode_steps} idle_steps={self.idle_steps}"
+            f"ttft_p95={self.ttft_p95_s * 1e3:.0f}ms "
+            f"itl_p95={self.itl_p95_s * 1e3:.0f}ms, "
+            f"decode_steps={self.decode_steps} idle_steps={self.idle_steps} "
+            f"prefill_chunks={self.prefill_chunks}"
         )
+
+
+@dataclasses.dataclass
+class _PrefillTask:
+    """One admitted request's in-flight piggyback prefill: `done` tokens
+    of the prompt are already in the cache (radix prefix hit + chunks
+    landed so far); the rest streams in budgeted chunks."""
+
+    slot: int
+    req: Request
+    done: int
 
 
 class ServingLoop:
@@ -118,11 +157,27 @@ class ServingLoop:
     more hot-resident experts. `kv_layout="slots"` restores the
     contiguous SlotKVCache.
 
-    Decode attention against the pools is BLOCK-SPARSE: the engine
-    slices each step's block tables to the pow2-bucketed active width,
-    and `paged_attn_backend` ("auto" | "pallas" | "ref", default the
-    config's setting) picks the Pallas paged-attention kernel
-    (kernels/paged_attention) or the jnp dense-gather path.
+    Attention against the pools is BLOCK-SPARSE in BOTH phases: the
+    engine slices each decode step's AND each prefill chunk's block
+    tables to the pow2-bucketed active width, and `paged_attn_backend`
+    ("auto" | "pallas" | "ref", default the config's setting) picks the
+    chunked Pallas paged-attention kernel family
+    (kernels/paged_attention — decode is the chunk-of-1 case) or the
+    jnp dense-gather path.
+
+    Admission prefill is CHUNKED and PIGGYBACKED by default
+    (`chunked_prefill=True`, paged layout + attention-only archs): an
+    admitted prompt's uncached suffix streams into the cache in chunks
+    of at most `prefill_chunk_tokens` tokens per loop iteration (chunk
+    widths drawn from the bucket table, past-widths from the same pow2
+    table slicing as decode), each chunk sharing the iteration with a
+    decode group step — so a long prompt never stalls in-flight decode
+    behind one monolithic prefill call (the TTFT/ITL win
+    `serving_bench.py --mixed` measures). The slot joins decode once
+    its last chunk lands and samples the first token. Recurrent-mixer
+    archs (chunk state cannot be threaded through a token-keyed cache)
+    and the contiguous `kv_layout="slots"` fall back to whole-suffix
+    admission prefill.
     """
 
     def __init__(
@@ -147,6 +202,8 @@ class ServingLoop:
         kv_pool_blocks: Optional[int] = None,
         prefix_cache: bool = True,
         paged_attn_backend: Optional[str] = None,
+        chunked_prefill: bool = True,
+        prefill_chunk_tokens: Optional[int] = None,
     ):
         assert cfg.moe is not None, "ServingLoop drives the TriMoE MoE path"
         assert kv_layout in ("paged", "slots"), kv_layout
@@ -154,6 +211,13 @@ class ServingLoop:
             cfg = dataclasses.replace(cfg, paged_attn_backend=paged_attn_backend)
         self.cfg = cfg
         self.paged = kv_layout == "paged"
+        from repro.serving.paged_kv import prefix_cacheable
+
+        # chunked piggyback needs a token-position-addressable cache for
+        # EVERY mixer (a chunk boundary cannot thread recurrent state)
+        self.chunked = (
+            chunked_prefill and self.paged and prefix_cacheable(cfg)
+        )
         if self.paged:
             self.kv = PagedKVCache(
                 cfg, batch_size, cache_len, block_size=block_size,
@@ -185,10 +249,21 @@ class ServingLoop:
             thresholds=thresholds, cold_capacity_frac=cold_capacity_frac,
             prefill_rows=prefill_rows or min(batch_size, 4),
         )
+        # budgeted suffix tokens per piggyback chunk call: the bound on
+        # how long any single prefill call can stall decode. 32 balances
+        # per-call dispatch overhead against interleaving granularity;
+        # lower it for tighter ITL, raise it for prompt throughput.
+        if prefill_chunk_tokens is None:
+            prefill_chunk_tokens = 32
+        assert prefill_chunk_tokens >= 1
+        self.prefill_chunk_tokens = prefill_chunk_tokens
         self.stats = LoopStats()
         self.completions: List[Request] = []
         self._t_admit: Dict[int, float] = {}
+        self._t_submit: Dict[int, float] = {}
+        self._t_last_tok: Dict[int, float] = {}
         self._slot_req: Dict[int, Request] = {}  # paged: slot -> request
+        self._prefill_tasks: List[_PrefillTask] = []  # FIFO piggyback queue
         self._pending_counts = None  # previous group's realized loads
 
     # ------------------------------------------------------------ intake
@@ -197,6 +272,9 @@ class ServingLoop:
             f"request {req.rid}: {req.prompt_len}+{req.max_new_tokens} tokens "
             f"overflow the cache ring (cache_len={self.kv.seq_len})"
         )
+        # keyed by rid: a re-used rid (bench warmup/timed passes) must
+        # restart the TTFT clock, so overwrite rather than setdefault
+        self._t_submit[req.rid] = time.time()
         self.batcher.submit(req)
 
     def _free_slots(self, freed: List[int]) -> None:
@@ -237,6 +315,17 @@ class ServingLoop:
             self._t_admit[r.rid] = time.time()
             self.stats.admitted += 1
         if not filled:
+            return
+        if self.chunked:
+            # piggyback admission: don't prefill here — enqueue the
+            # uncached suffix as budgeted chunk work that `run` drains
+            # one chunk call per iteration, alongside decode steps
+            for i in filled:
+                r = self.batcher.slots[i].request
+                self.batcher.slots[i].prefilling = True
+                self._prefill_tasks.append(
+                    _PrefillTask(i, r, past_len.get(i, 0))
+                )
             return
         # prefill writes the slots' cache (rows or blocks) in place; the
         # per-row logits sample the first generated token (no wasted
@@ -283,9 +372,69 @@ class ServingLoop:
             for row, i in enumerate(slots):
                 self._record_first(self.batcher.slots[i].request, logits[row])
 
+    def _prefill_step(self) -> None:
+        """Run at most ONE budgeted chunk call of pending piggyback
+        prefill work. Each loop iteration gets one of these plus one
+        decode group step, so a long admitted prompt streams into the
+        cache at `prefill_chunk_tokens` tokens per iteration while
+        decode keeps producing tokens. Serviced-but-unfinished tasks
+        rotate to the back of the queue (round-robin), so a long prompt
+        neither head-blocks short admissions' first tokens nor starves
+        behind them. A task whose last chunk lands samples its first
+        token from that chunk's last-real-token logits, radix-commits
+        the prompt, and rejoins decode."""
+        if not self._prefill_tasks:
+            return
+        rows: List[tuple] = []  # (task, chunk size)
+        left = self.prefill_chunk_tokens
+        for t in self._prefill_tasks:
+            if left <= 0 or len(rows) >= self.engine.prefill_rows:
+                break
+            # a task's natural chunk is min(remaining, budget); FIFO
+            # followers join the call only if their whole chunk fits the
+            # leftover budget — co-scheduling must not shrink chunks
+            # (that would split short prompts into confetti)
+            n = min(t.req.prompt_len - t.done, self.prefill_chunk_tokens)
+            if rows and n > left:
+                break
+            rows.append((t, n))
+            left -= n
+        width = max(n for _, n in rows)
+        if self.bucket_table is not None:
+            width = self.bucket_table.bucket_of(width)
+        prompts = np.zeros((len(rows), width), np.int32)
+        lengths = np.zeros((len(rows),), np.int32)
+        pasts = np.zeros((len(rows),), np.int32)
+        slots = []
+        for row, (t, n) in enumerate(rows):
+            prompts[row, :n] = t.req.prompt[t.done:t.done + n]
+            lengths[row] = n
+            pasts[row] = t.done
+            slots.append(t.slot)
+        logits = self.engine.prefill_slots_paged(prompts, slots, lengths, pasts)
+        self.stats.prefill_chunks += 1
+        unfinished = []
+        for row, (t, n) in enumerate(rows):
+            t.done += n
+            if t.done == t.req.prompt_len:
+                self.batcher.slots[t.slot].prefilling = False
+                # index the freshly computed prompt blocks so later
+                # (and queued) admissions can share them
+                self.kv.commit_prompt(t.slot, t.req.prompt)
+                self._record_first(t.req, logits[row])
+            else:
+                unfinished.append(t)
+        # rows is a prefix of the task queue; rotate its survivors back
+        self._prefill_tasks = self._prefill_tasks[len(rows):] + unfinished
+
     def _record_first(self, r: Request, row_logits) -> None:
         r.generated.append(int(np.asarray(jnp.argmax(row_logits, -1))))
         self.stats.generated_tokens += 1
+        now = time.time()
+        t0 = self._t_submit.get(r.rid, self._t_admit.get(r.rid))
+        if t0 is not None:
+            self.stats.ttft_s.append(now - t0)
+        self._t_last_tok[r.rid] = now
 
     def _drain_completed(self) -> None:
         while len(self.completions) < len(self.batcher.completed):
@@ -295,10 +444,14 @@ class ServingLoop:
             t0 = self._t_admit.get(r.rid)
             if t0 is not None:
                 self.stats.latencies_s.append(time.time() - t0)
+            # per-rid timing state must not grow without bound in a
+            # long-lived loop serving a stream of unique rids
+            for d in (self._t_admit, self._t_submit, self._t_last_tok):
+                d.pop(r.rid, None)
 
     # ------------------------------------------------------------- drive
     def _work_remaining(self) -> bool:
-        if self.batcher.queue:
+        if self.batcher.queue or self._prefill_tasks:
             return True
         return any(
             s.request is not None and not s.request.done for s in self.batcher.slots
@@ -320,6 +473,9 @@ class ServingLoop:
                 break
             steps += 1
             self._admit()
+            # piggyback: one budgeted prefill chunk rides along with
+            # this iteration's decode step (chunked_prefill)
+            self._prefill_step()
             gb = self.batcher.next_group()
             self.stats.util_sum += self.batcher.utilization
             self.stats.util_samples += 1
@@ -350,6 +506,13 @@ class ServingLoop:
             self.batcher.record(live_idx, nxt[live])
             self.stats.decode_steps += 1
             self.stats.generated_tokens += len(live_idx)
+            now = time.time()
+            for i in live_idx:
+                rid = self.batcher.slots[i].request.rid
+                prev = self._t_last_tok.get(rid)
+                if prev is not None:
+                    self.stats.itl_s.append(now - prev)
+                self._t_last_tok[rid] = now
         self._flush_replan()
         # recycle (but don't admit) the final wave of completions so the
         # loop can be reused for further submissions

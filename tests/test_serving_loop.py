@@ -90,9 +90,10 @@ def test_loop_oversubscribed_queue_drains(setup):
 
 def test_mixed_lengths_bucketed_compiles_and_matches_solo(setup):
     """A mixed-length trace (>=6 distinct prompt lengths) stays within
-    len(bucket_table) distinct prefill compiles AND remains token-for-
-    token identical to single-request generation (acceptance criteria
-    for bucketed masked prefill)."""
+    len(bucket_table) x n_width_buckets(blocks_per_slot) distinct
+    prefill compiles (chunk-width buckets x pow2 past-table widths) AND
+    remains token-for-token identical to single-request generation
+    (acceptance criteria for bucketed + chunked paged prefill)."""
     cfg, params = setup
     lengths = [3, 5, 7, 9, 12, 17]  # 6 distinct lengths, 3 buckets
     new_tokens = 4
@@ -111,7 +112,10 @@ def test_mixed_lengths_bucketed_compiles_and_matches_solo(setup):
         loop.submit(copy.deepcopy(r))
     done = loop.run(max_steps=500)
     assert len(done) == len(lengths)
-    assert loop.engine.prefill_compiles <= len(loop.bucket_table)
+    from repro.kernels.paged_attention import n_width_buckets
+
+    bound = len(loop.bucket_table) * n_width_buckets(loop.kv.blocks_per_slot)
+    assert loop.engine.prefill_compiles <= bound
     batched = {r.rid: r.generated for r in done}
 
     solo = ServingLoop(cfg, params, batch_size=1, n_groups=1,

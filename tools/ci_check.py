@@ -8,9 +8,12 @@ one pytest node id per line, '#' comments allowed). CI fails on:
     fixes must be banked by trimming the baseline, or they can silently
     regress later),
   * --min-passed N given and fewer than N tests passed (full-tier runs),
-  * tracked Python bytecode (__pycache__ / *.pyc) in the git index —
-    build artifacts must never be committed (they were once, by
-    accident; .gitignore plus this gate keeps them out).
+  * tracked build/test artifacts in the git index — Python bytecode
+    (__pycache__ / *.pyc), junit XML (report.xml, *.junit.xml), and
+    bench scratch outputs (BENCH_serving_{mixed,nightly}.json; the
+    committed BENCH_serving.json BASELINE is exempt) must never be
+    committed (bytecode was once, by accident; .gitignore plus this
+    gate keeps all of them out).
 
 Baseline entries that still fail never block. Entries absent from the
 report (e.g. @slow tests deselected in the fast tier) are ignored.
@@ -43,8 +46,25 @@ import sys
 import xml.etree.ElementTree as ET
 
 
-def tracked_bytecode() -> list:
-    """Tracked __pycache__/*.pyc paths (empty when clean or when git is
+def _is_artifact(path: str) -> bool:
+    """Build/test artifacts that must never sit in the git index:
+    bytecode, junit XML reports, and bench scratch outputs. The
+    committed BENCH_serving.json baseline is NOT an artifact — only the
+    *_mixed/*_nightly scratch files CI regenerates every run are."""
+    if "__pycache__" in path or path.endswith((".pyc", ".pyo")):
+        return True
+    name = path.rsplit("/", 1)[-1]
+    if name == "report.xml" or name.endswith(".junit.xml"):
+        return True
+    if name.startswith("junit") and name.endswith(".xml"):
+        return True
+    return name.startswith("BENCH_") and (
+        name.endswith("_mixed.json") or name.endswith("_nightly.json")
+    )
+
+
+def tracked_artifacts() -> list:
+    """Tracked artifact paths (empty when clean or when git is
     unavailable — e.g. running from an exported tarball)."""
     try:
         out = subprocess.run(
@@ -52,10 +72,7 @@ def tracked_bytecode() -> list:
         ).stdout
     except (OSError, subprocess.CalledProcessError):
         return []
-    return [
-        p for p in out.splitlines()
-        if "__pycache__" in p or p.endswith((".pyc", ".pyo"))
-    ]
+    return [p for p in out.splitlines() if _is_artifact(p)]
 
 
 def node_id(case: ET.Element) -> str:
@@ -143,10 +160,11 @@ def main(argv=None) -> int:
         print(f"[ci_check] FAIL: only {len(passed)} passed "
               f"< required floor {args.min_passed}")
         rc = 1
-    tracked = tracked_bytecode()
+    tracked = tracked_artifacts()
     if tracked:
-        print(f"[ci_check] FAIL: {len(tracked)} tracked bytecode path(s) — "
-              f"git rm --cached them (they are .gitignore'd):")
+        print(f"[ci_check] FAIL: {len(tracked)} tracked artifact path(s) "
+              f"(bytecode / junit XML / bench scratch) — git rm --cached "
+              f"them (they are .gitignore'd):")
         for p in tracked[:10]:
             print(f"  tracked: {p}")
         if len(tracked) > 10:
