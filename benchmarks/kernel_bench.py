@@ -18,7 +18,7 @@ import numpy as np
 from repro.hardware import TPU_V5E
 from repro.kernels.expert_gemv import cold_expert_ffn
 from repro.kernels.flash_attention import mha
-from repro.kernels.moe_gemm import grouped_expert_matmul
+from repro.kernels.moe_gemm import grouped_expert_ffn, grouped_expert_matmul
 from repro.kernels.paged_attention import (
     paged_decode_gqa,
     paged_decode_gqa_ref,
@@ -41,14 +41,34 @@ def bench_moe_gemm():
     eo = jnp.asarray(rng.integers(0, e, t), jnp.int32)
     w = jnp.asarray(rng.standard_normal((e, d, f)) * 0.1, jnp.float32)
     us_ref = _time(
-        lambda: grouped_expert_matmul(x, eo, w, capacity=t + e * 128, use_ref=True)
+        lambda: grouped_expert_matmul(x, eo, w, capacity=t + e * 128, backend="ref")
     )
-    got = grouped_expert_matmul(x, eo, w, capacity=t + e * 128, interpret=True)
-    ref = grouped_expert_matmul(x, eo, w, capacity=t + e * 128, use_ref=True)
+    got = grouped_expert_matmul(x, eo, w, capacity=t + e * 128, backend="pallas")
+    ref = grouped_expert_matmul(x, eo, w, capacity=t + e * 128, backend="ref")
     err = float(jnp.max(jnp.abs(got - ref)))
     flops = 2 * t * d * f
     tpu_us = flops / TPU_V5E.flops * 1e6
     print(f"kernel/moe_gemm,{us_ref:.1f},err={err:.1e} tpu_roofline_us={tpu_us:.2f}")
+
+
+def bench_moe_grouped_ffn():
+    """The fused prefill expert FFN (gate+up wide GEMM, silu, down) the
+    model's pallas moe_backend runs over dispatch buffers — einsum
+    reference timed, kernel numerics validated at the bench shape."""
+    rng = np.random.default_rng(4)
+    e, c, d, f = 8, 128, 512, 1024
+    h = jnp.asarray(rng.standard_normal((e, c, d)) * 0.5, jnp.float32)
+    wg = jnp.asarray(rng.standard_normal((e, d, f)) * 0.05, jnp.float32)
+    wu = jnp.asarray(rng.standard_normal((e, d, f)) * 0.05, jnp.float32)
+    wd = jnp.asarray(rng.standard_normal((e, f, d)) * 0.05, jnp.float32)
+    us_ref = _time(lambda: grouped_expert_ffn(h, wg, wu, wd, backend="ref"))
+    got = grouped_expert_ffn(h, wg, wu, wd, backend="pallas")
+    ref = grouped_expert_ffn(h, wg, wu, wd, backend="ref")
+    err = float(jnp.max(jnp.abs(got - ref)))
+    flops = 6 * e * c * d * f  # gate + up + down GEMMs
+    tpu_us = flops / TPU_V5E.flops * 1e6
+    print(f"kernel/moe_grouped_ffn,{us_ref:.1f},err={err:.1e} "
+          f"tpu_roofline_us={tpu_us:.2f}")
 
 
 def bench_expert_gemv():
@@ -58,9 +78,9 @@ def bench_expert_gemv():
     w1 = jnp.asarray(rng.standard_normal((e, d, f)) * 0.05, jnp.float32)
     w3 = jnp.asarray(rng.standard_normal((e, d, f)) * 0.05, jnp.float32)
     w2 = jnp.asarray(rng.standard_normal((e, f, d)) * 0.05, jnp.float32)
-    us_ref = _time(lambda: cold_expert_ffn(x, w1, w3, w2, use_ref=True))
-    got = cold_expert_ffn(x, w1, w3, w2, interpret=True)
-    ref = cold_expert_ffn(x, w1, w3, w2, use_ref=True)
+    us_ref = _time(lambda: cold_expert_ffn(x, w1, w3, w2, backend="ref"))
+    got = cold_expert_ffn(x, w1, w3, w2, backend="pallas")
+    ref = cold_expert_ffn(x, w1, w3, w2, backend="ref")
     err = float(jnp.max(jnp.abs(got - ref)))
     bytes_ = e * 3 * d * f * 4
     tpu_us = bytes_ / TPU_V5E.hbm_bw * 1e6  # cold experts are BW-bound
@@ -73,9 +93,9 @@ def bench_flash_attention():
     q = jnp.asarray(rng.standard_normal((b, s, h, dh)), jnp.float32)
     k = jnp.asarray(rng.standard_normal((b, s, h, dh)), jnp.float32)
     v = jnp.asarray(rng.standard_normal((b, s, h, dh)), jnp.float32)
-    us_ref = _time(lambda: mha(q, k, v, causal=True, use_ref=True))
-    got = mha(q, k, v, causal=True, bq=128, bk=128, interpret=True)
-    ref = mha(q, k, v, causal=True, use_ref=True)
+    us_ref = _time(lambda: mha(q, k, v, causal=True, backend="ref"))
+    got = mha(q, k, v, causal=True, bq=128, bk=128, backend="pallas")
+    ref = mha(q, k, v, causal=True, backend="ref")
     err = float(jnp.max(jnp.abs(got - ref)))
     flops = 4 * b * h * s * s * dh / 2  # causal halves
     tpu_us = flops / TPU_V5E.flops * 1e6
@@ -139,6 +159,7 @@ def bench_scheduler_latency():
 
 def run_all():
     bench_moe_gemm()
+    bench_moe_grouped_ffn()
     bench_expert_gemv()
     bench_flash_attention()
     bench_paged_attention()

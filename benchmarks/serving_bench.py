@@ -29,8 +29,16 @@ prefix hit-rate, peak blocks-in-use, and tokens/s for both. Exits
 nonzero unless hit-rate > 0, reuse is at least --min-speedup faster
 than no-reuse, and the PR-2 compile-count bound still holds.
 
-Results merge into one JSON keyed by mode, so CI can run --mixed and
---prefix into the same BENCH_serving.json artifact.
+MoE mode (--moe): serves the same decode-heavy trace twice with
+moe_backend="ref" (einsum expert FFN) vs "pallas" (grouped expert GEMM
+prefill / batched expert GEMV decode), in fp32 where the kernels are
+bit-exact against the einsum. Exits nonzero if the two token streams
+differ (the nightly MoE kernel-parity gate) and records the pallas/ref
+tokens/s ratio; --min-moe-speedup gates it (0 on CPU, where interpret
+mode is slower; raise on TPU runners).
+
+Results merge into one JSON keyed by mode, so CI can run --mixed,
+--prefix, and --moe into the same BENCH_serving.json artifact.
 
   PYTHONPATH=src python benchmarks/serving_bench.py
   PYTHONPATH=src python benchmarks/serving_bench.py \
@@ -38,6 +46,8 @@ Results merge into one JSON keyed by mode, so CI can run --mixed and
   PYTHONPATH=src python benchmarks/serving_bench.py --mixed --smoke \
       --json BENCH_serving.json
   PYTHONPATH=src python benchmarks/serving_bench.py --prefix --smoke \
+      --json BENCH_serving.json
+  PYTHONPATH=src python benchmarks/serving_bench.py --moe --smoke \
       --json BENCH_serving.json
 """
 from __future__ import annotations
@@ -541,6 +551,136 @@ def run_prefix(args) -> int:
     return rc
 
 
+# ------------------------------------------------------ moe-backend mode
+def run_moe(args) -> int:
+    """Decode-tokens/s comparison across `cfg.moe_backend`: the same
+    decode-heavy request set served twice — moe_backend="ref" (einsum
+    expert FFN) vs "pallas" (grouped GEMM prefill / batched GEMV
+    decode) — with fp32 params so the two runs must be token-for-token
+    IDENTICAL (the fused kernels are bit-exact against the einsum in
+    fp32; any divergence is a kernel bug, and the mode exits nonzero —
+    the nightly MoE parity gate). Reports tokens/s per backend and the
+    pallas-over-ref speedup ratio. On this CPU container "pallas" runs
+    in interpret mode and is SLOWER than the einsum — the ratio is
+    recorded for trend tracking and --min-moe-speedup defaults to 0;
+    raise it on TPU runners where the kernel path must win."""
+    import copy
+    import dataclasses
+
+    from repro.kernels.paged_attention import resolve_backend
+    from repro.serving.loop import LoopStats
+
+    cfg = reduce_for_smoke(get_config(args.arch))
+    # fp32: kernel == einsum bit-exactly, so greedy/sampled tokens
+    # cannot flip between backends and identity is a hard gate
+    cfg = dataclasses.replace(
+        cfg, param_dtype="float32", compute_dtype="float32"
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    new_tokens = 4 if args.smoke else args.new_tokens
+    n_requests = 6 if args.smoke else args.requests
+    prompt_len = args.prompt_len
+    cache_len = prompt_len + new_tokens + 2
+
+    def serve(backend):
+        loop = ServingLoop(
+            cfg, params, batch_size=args.moe_batch,
+            n_groups=args.moe_groups, cache_len=cache_len,
+            moe_backend=backend,
+        )
+        assert loop.engine.moe_backend == resolve_backend(backend), (
+            "engine did not resolve the requested moe_backend"
+        )
+        # untimed warmup (compile), then best-of-N timed replays of the
+        # SAME seed-deterministic request set
+        for r in make_requests(cfg, n_requests, prompt_len, new_tokens):
+            loop.submit(r)
+        loop.run()
+        best, done, toks = None, 0, None
+        for _ in range(max(1, args.bench_repeats)):
+            loop.stats = LoopStats()
+            for r in make_requests(cfg, n_requests, prompt_len, new_tokens):
+                loop.submit(r)
+            finished = loop.run()
+            done = loop.stats.completed
+            if best is None or loop.stats.tokens_per_s > best.tokens_per_s:
+                best = loop.stats
+                toks = {r.rid: copy.deepcopy(r.generated) for r in finished}
+        return loop, best, done, toks
+
+    with CompileCounter() as cc:
+        loop_ref, st_ref, done_ref, toks_ref = serve("ref")
+        loop_pal, st_pal, done_pal, toks_pal = serve("pallas")
+    speedup = st_pal.tokens_per_s / max(st_ref.tokens_per_s, 1e-9)
+    identical = toks_pal == toks_ref
+    print(f"[serving_bench] moe backends: {n_requests} requests x "
+          f"{new_tokens} new tokens, prompt_len={prompt_len}, fp32 "
+          f"(pallas resolves to "
+          f"{loop_pal.engine.moe_backend.kind}"
+          f"{' interpret' if loop_pal.engine.moe_backend.interpret else ''})")
+    print(f"[serving_bench] moe_backend=ref:    {st_ref.summary()}")
+    print(f"[serving_bench] moe_backend=pallas: {st_pal.summary()}")
+    print(f"[serving_bench] pallas/ref tokens/s ratio {speedup:.3f}x "
+          f"(floor {args.min_moe_speedup}x); tokens identical: "
+          f"{identical}; backend compiles: {cc.count}")
+
+    result = {
+        "arch": cfg.name,
+        "requests": n_requests,
+        "prompt_len": prompt_len,
+        "new_tokens": new_tokens,
+        "batch": args.moe_batch,
+        "groups": args.moe_groups,
+        "dtype": "float32",
+        "pallas_resolved": list(loop_pal.engine.moe_backend),
+        "tokens_per_s_ref": round(st_ref.tokens_per_s, 1),
+        "tokens_per_s_pallas": round(st_pal.tokens_per_s, 1),
+        "speedup": round(speedup, 3),
+        "tokens_identical": identical,
+        "backend_compiles": cc.count,
+    }
+    # snapshot the committed baseline BEFORE (possibly) overwriting it
+    baseline = (
+        _baseline_entry(args.baseline_json, "moe")
+        if args.baseline_json else None
+    )
+    if args.json:
+        write_json(args.json, "moe", result)
+
+    rc = 0
+    if done_ref != n_requests or done_pal != n_requests:
+        print(f"[serving_bench] FAIL: incomplete serve (ref {done_ref}, "
+              f"pallas {done_pal} of {n_requests})")
+        rc = 1
+    if not identical:
+        diff = [rid for rid in toks_ref
+                if toks_pal.get(rid) != toks_ref[rid]]
+        print(f"[serving_bench] FAIL: fp32 token streams diverge across "
+              f"moe_backend (requests {diff}) — kernel/einsum parity "
+              f"is broken")
+        rc = 1
+    if speedup < args.min_moe_speedup:
+        print(f"[serving_bench] FAIL: moe speedup {speedup:.3f}x < floor "
+              f"{args.min_moe_speedup}x")
+        rc = 1
+    if args.baseline_json:
+        base_speedup = None if baseline is None else baseline.get("speedup")
+        if base_speedup is None:
+            print(f"[serving_bench] note: no moe baseline in "
+                  f"{args.baseline_json}; gate skipped")
+        else:
+            # machine-relative: the pallas/ref ratio measured in this
+            # run must hold the committed level (absolute tokens/s
+            # varies across runners; the ratio is the stable signal)
+            floor = args.baseline_frac * float(base_speedup)
+            ok = speedup >= floor
+            print(f"[serving_bench] {'ok' if ok else 'FAIL'}: moe speedup "
+                  f"{speedup:.3f}x vs baseline {float(base_speedup):.3f}x "
+                  f"(floor {floor:.3f}x = {args.baseline_frac}x)")
+            rc = rc if ok else 1
+    return rc
+
+
 def _baseline_entry(path, mode):
     """The committed result dict for `mode` (BENCH_serving.json), or
     None when the file/section is missing, unreadable, or carries no
@@ -640,6 +780,18 @@ def main(argv=None):
                     help="allowed ITL-p95 multiple of the committed "
                          "baseline in --mixed (absolute latency varies "
                          "across runners)")
+    ap.add_argument("--moe", action="store_true",
+                    help="moe-backend comparison: serves the same "
+                         "decode-heavy trace with moe_backend=ref vs "
+                         "pallas in fp32; gates token identity (kernel "
+                         "parity) and records the speedup ratio")
+    ap.add_argument("--moe-batch", type=int, default=4)
+    ap.add_argument("--moe-groups", type=int, default=1)
+    ap.add_argument("--min-moe-speedup", type=float, default=0.0,
+                    help="required pallas/ref tokens/s ratio in --moe "
+                         "(0 on CPU runners: interpret-mode kernels are "
+                         "slower than the einsum; raise on TPU where "
+                         "the kernel path must win)")
     ap.add_argument("--prefix", action="store_true",
                     help="shared-system-prompt replay: gates prefix "
                          "hit-rate > 0, >= --min-speedup over no-reuse, "
@@ -671,6 +823,8 @@ def main(argv=None):
         return run_mixed(args)
     if args.prefix:
         return run_prefix(args)
+    if args.moe:
+        return run_moe(args)
     return run_grid(args)
 
 

@@ -92,11 +92,20 @@ class ModelConfig:
     compute_dtype: str = "bfloat16"
     # attention contract: can this arch serve 500k+ contexts?
     subquadratic: bool = False
-    # paged decode-attention backend (serving, kernels/paged_attention):
-    # "auto" = Pallas kernel on TPU / jnp dense-gather ref on CPU;
-    # "pallas" forces the kernel (interpret mode off-TPU); "ref" forces
-    # the dense-gather path.
+    # kernel-backend knobs, one per kernel family, all resolved through
+    # the shared repro.kernels.backend.resolve_backend rule:
+    # "auto" = Pallas kernel on TPU / pure-jnp reference off-TPU;
+    # "pallas" forces the kernel (interpret mode off-TPU, so CPU CI
+    # exercises the kernel path); "ref" forces the reference.
+    #
+    # paged decode/prefill attention (serving, kernels/paged_attention):
+    # ref = the jnp dense-gather path.
     paged_attn_backend: str = "auto"
+    # routed-expert FFN (models/moe.py + serving/tiered_moe.py):
+    # pallas = grouped MoE GEMM (kernels/moe_gemm) for prefill buffers,
+    # batched expert GEMV (kernels/expert_gemv) for decode buffers;
+    # ref = the inline grouped einsums.
+    moe_backend: str = "auto"
 
     # ------------------------------------------------------------------
     @property

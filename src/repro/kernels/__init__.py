@@ -1,3 +1,10 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Backend selection is shared across every kernel family here:
+# repro.kernels.backend.resolve_backend maps "auto" | "pallas" | "ref"
+# to a concrete (kind, interpret) pair (see backend.py).
+from repro.kernels.backend import KernelBackend, resolve_backend
+
+__all__ = ["KernelBackend", "resolve_backend"]

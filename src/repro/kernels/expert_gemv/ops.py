@@ -1,16 +1,25 @@
-"""jit'd wrapper: batched cold-expert execution (one NDP per expert)."""
+"""jit'd wrapper: batched cold-expert execution (one NDP per expert).
+
+Backend selection is the shared `kernels/backend.py` rule: pass
+`backend="auto" | "pallas" | "ref"`; the legacy `interpret=`/`use_ref=`
+kwargs are honored for one release behind a DeprecationWarning.
+"""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import resolve_op_backend
 from repro.kernels.expert_gemv.expert_gemv import expert_ffn_gemv
 from repro.kernels.expert_gemv.ref import expert_ffn_ref
 
 
-@functools.partial(jax.jit, static_argnames=("bf", "interpret", "use_ref"))
+@functools.partial(
+    jax.jit, static_argnames=("bf", "backend", "interpret", "use_ref")
+)
 def cold_expert_ffn(
     x: jnp.ndarray,  # [E, C, D] per-expert token buffers (C small)
     w1: jnp.ndarray,  # [E, D, F]
@@ -18,12 +27,27 @@ def cold_expert_ffn(
     w2: jnp.ndarray,  # [E, F, D]
     *,
     bf: int = 512,
-    interpret: bool = True,
-    use_ref: bool = False,
+    backend: Optional[str] = None,
+    interpret: Optional[bool] = None,  # deprecated: use backend=
+    use_ref: Optional[bool] = None,  # deprecated: use backend=
 ) -> jnp.ndarray:
     """Each expert's buffer runs the fused single-pass FFN — the
-    per-DIMM-NDP parallelism of the paper (one localized expert per unit)."""
-    if use_ref:
+    per-DIMM-NDP parallelism of the paper (one localized expert per unit).
+
+    F is zero-padded up to a multiple of the F-tile when it does not
+    divide (exact: silu(0) * 0 = 0 through zero-padded down rows), so
+    any expert width works, not just bf-aligned ones."""
+    kind, interp = resolve_op_backend(
+        backend, interpret=interpret, use_ref=use_ref, op="cold_expert_ffn"
+    )
+    if kind == "ref":
         return jax.vmap(expert_ffn_ref)(x, w1, w3, w2)
-    fn = functools.partial(expert_ffn_gemv, bf=bf, interpret=interpret)
+    f = w1.shape[-1]
+    bf_eff = min(bf, f)
+    if f % bf_eff:
+        f_pad = (f + bf_eff - 1) // bf_eff * bf_eff
+        w1 = jnp.pad(w1, ((0, 0), (0, 0), (0, f_pad - f)))
+        w3 = jnp.pad(w3, ((0, 0), (0, 0), (0, f_pad - f)))
+        w2 = jnp.pad(w2, ((0, 0), (0, f_pad - f), (0, 0)))
+    fn = functools.partial(expert_ffn_gemv, bf=bf, interpret=interp)
     return jax.vmap(fn)(x, w1, w3, w2)

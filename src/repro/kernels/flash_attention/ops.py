@@ -1,17 +1,25 @@
-"""jit'd wrapper reshaping [B, S, H, hd] model layout to kernel layout."""
+"""jit'd wrapper reshaping [B, S, H, hd] model layout to kernel layout.
+
+Backend selection is the shared `kernels/backend.py` rule: pass
+`backend="auto" | "pallas" | "ref"`; the legacy `interpret=`/`use_ref=`
+kwargs are honored for one release behind a DeprecationWarning.
+"""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import resolve_op_backend
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 
 
 @functools.partial(
-    jax.jit, static_argnames=("causal", "bq", "bk", "interpret", "use_ref")
+    jax.jit,
+    static_argnames=("causal", "bq", "bk", "backend", "interpret", "use_ref"),
 )
 def mha(
     q: jnp.ndarray,  # [B, Sq, H, hd]
@@ -21,14 +29,18 @@ def mha(
     causal: bool = True,
     bq: int = 256,
     bk: int = 256,
-    interpret: bool = True,
-    use_ref: bool = False,
+    backend: Optional[str] = None,
+    interpret: Optional[bool] = None,  # deprecated: use backend=
+    use_ref: Optional[bool] = None,  # deprecated: use backend=
 ) -> jnp.ndarray:
+    kind, interp = resolve_op_backend(
+        backend, interpret=interpret, use_ref=use_ref, op="mha"
+    )
     b, sq, h, dh = q.shape
     qt = q.transpose(0, 2, 1, 3).reshape(b * h, sq, dh)
     kt = k.transpose(0, 2, 1, 3).reshape(b * h, -1, dh)
     vt = v.transpose(0, 2, 1, 3).reshape(b * h, -1, dh)
-    if use_ref:
+    if kind == "ref":
         o = attention_ref(
             qt.reshape(b, h, sq, dh),
             kt.reshape(b, h, -1, dh),
@@ -37,5 +49,5 @@ def mha(
         ).reshape(b * h, sq, dh)
     else:
         o = flash_attention(qt, kt, vt, causal=causal, bq=bq, bk=bk,
-                            interpret=interpret)
+                            interpret=interp)
     return o.reshape(b, h, sq, dh).transpose(0, 2, 1, 3)

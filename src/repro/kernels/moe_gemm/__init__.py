@@ -1,5 +1,11 @@
 from repro.kernels.moe_gemm.moe_gemm import moe_gemm
-from repro.kernels.moe_gemm.ops import grouped_expert_matmul
-from repro.kernels.moe_gemm.ref import moe_gemm_ref
+from repro.kernels.moe_gemm.ops import grouped_expert_ffn, grouped_expert_matmul
+from repro.kernels.moe_gemm.ref import grouped_ffn_ref, moe_gemm_ref
 
-__all__ = ["moe_gemm", "grouped_expert_matmul", "moe_gemm_ref"]
+__all__ = [
+    "moe_gemm",
+    "grouped_expert_matmul",
+    "grouped_expert_ffn",
+    "moe_gemm_ref",
+    "grouped_ffn_ref",
+]

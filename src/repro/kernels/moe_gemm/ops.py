@@ -1,19 +1,30 @@
-"""jit'd public wrapper for the grouped expert GEMM kernel.
+"""jit'd public wrappers for the grouped expert GEMM kernel.
 
-Handles the host-side prep the kernel contract requires: sorting tokens
-by expert, padding every expert group to the M-tile, building the
-tile->expert map, and unpadding the result. On CPU (tests/smoke) the
-kernel runs in interpret mode; `use_ref=True` routes to the jnp oracle.
+`grouped_expert_matmul` handles the host-side prep the raw kernel
+contract requires: sorting tokens by expert, padding every expert group
+to the M-tile, building the tile->expert map, and unpadding the result.
+
+`grouped_expert_ffn` is the fused SwiGLU FFN over already-dispatched
+expert buffers [G, C, D] — the shape `models/moe.py` and
+`serving/tiered_moe.py` produce — lowered as two `moe_gemm` calls
+(gate+up concatenated into one wide GEMM, then down) so the whole
+prefill expert FFN runs on the MXU-aligned grouped kernel.
+
+Backend selection is the shared `kernels/backend.py` rule: pass
+`backend="auto" | "pallas" | "ref"`; the legacy `interpret=`/`use_ref=`
+kwargs are honored for one release behind a DeprecationWarning.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import resolve_op_backend
 from repro.kernels.moe_gemm.moe_gemm import moe_gemm
-from repro.kernels.moe_gemm.ref import moe_gemm_ref
+from repro.kernels.moe_gemm.ref import grouped_ffn_ref, moe_gemm_ref
 
 
 def _round_up(x: int, m: int) -> int:
@@ -21,7 +32,8 @@ def _round_up(x: int, m: int) -> int:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "interpret", "use_ref", "capacity")
+    jax.jit,
+    static_argnames=("bm", "bn", "backend", "interpret", "use_ref", "capacity"),
 )
 def grouped_expert_matmul(
     x: jnp.ndarray,  # [T, D] tokens in arbitrary order
@@ -31,10 +43,14 @@ def grouped_expert_matmul(
     capacity: int,  # static upper bound for padded length
     bm: int = 128,
     bn: int = 128,
-    interpret: bool = True,
-    use_ref: bool = False,
+    backend: Optional[str] = None,
+    interpret: Optional[bool] = None,  # deprecated: use backend=
+    use_ref: Optional[bool] = None,  # deprecated: use backend=
 ) -> jnp.ndarray:
     """Returns [T, F] with row i = x[i] @ w[expert_of[i]]."""
+    kind, interp = resolve_op_backend(
+        backend, interpret=interpret, use_ref=use_ref, op="grouped_expert_matmul"
+    )
     t, d = x.shape
     e, _, f = w.shape
 
@@ -43,7 +59,7 @@ def grouped_expert_matmul(
     se = expert_of[order]
     group_sizes = jnp.zeros((e,), jnp.int32).at[se].add(1)
 
-    if use_ref:
+    if kind == "ref":
         ys = moe_gemm_ref(xs, w, group_sizes)
     else:
         # pad each group to a multiple of bm: compute destination rows
@@ -64,9 +80,74 @@ def grouped_expert_matmul(
         tile_expert = jnp.clip(
             jnp.searchsorted(ends, tile_start, side="right"), 0, e - 1
         ).astype(jnp.int32)
-        yp = moe_gemm(xp, w, tile_expert, bm=bm, bn=bn, interpret=interpret)
+        yp = moe_gemm(xp, w, tile_expert, bm=bm, bn=bn, interpret=interp)
         ys = yp[dest]
 
     # unsort back to input order
     inv = jnp.zeros_like(order).at[order].set(jnp.arange(t))
     return ys[inv]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "backend", "interpret", "use_ref")
+)
+def grouped_expert_ffn(
+    h: jnp.ndarray,  # [G, C, D] per-group dispatch buffers
+    w_gate: jnp.ndarray,  # [E, D, F]
+    w_up: jnp.ndarray,  # [E, D, F]
+    w_down: jnp.ndarray,  # [E, F, D]
+    group_expert: Optional[jnp.ndarray] = None,  # [G] weight row per group
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    backend: Optional[str] = None,
+    interpret: Optional[bool] = None,  # deprecated: use backend=
+    use_ref: Optional[bool] = None,  # deprecated: use backend=
+) -> jnp.ndarray:
+    """Fused grouped SwiGLU FFN: [G, C, D] -> [G, C, D], group g using
+    the weights of expert `group_expert[g]` (identity when None; G may
+    exceed E, e.g. the per-row dispatch's [B*E] groups over E experts).
+
+    Capacity buffers are equal-size and pre-sorted by construction, so
+    no argsort is needed here: groups pad to the M-tile, gate+up weights
+    concatenate into one [E, D, 2*F_pad] panel (one wide GEMM instead of
+    two), the SwiGLU nonlinearity runs between the two `moe_gemm` calls,
+    and the down projection streams [E, F_pad, D_pad] panels. Zero
+    padding is exact: silu(0) * 0 = 0 contributes nothing through the
+    zero-padded down rows, and padded C rows / D cols are sliced off.
+    """
+    kind, interp = resolve_op_backend(
+        backend, interpret=interpret, use_ref=use_ref, op="grouped_expert_ffn"
+    )
+    if kind == "ref":
+        return grouped_ffn_ref(h, w_gate, w_up, w_down, group_expert)
+
+    g, c, d = h.shape
+    e, _, f = w_gate.shape
+    if group_expert is None:
+        assert g == e, (g, e)
+        group_expert = jnp.arange(e, dtype=jnp.int32)
+    c_pad = _round_up(c, bm)
+    f_pad = _round_up(f, bn)
+    d_pad = _round_up(d, bn)
+
+    hp = jnp.pad(h, ((0, 0), (0, c_pad - c), (0, 0))).reshape(g * c_pad, d)
+    tile_expert = jnp.repeat(
+        group_expert.astype(jnp.int32), c_pad // bm
+    )  # [G * c_pad // bm]
+
+    # --- GEMM 1: x @ [w_gate | w_up] in one [D, 2*F_pad] panel ---
+    w_gu = jnp.concatenate(
+        [
+            jnp.pad(w_gate, ((0, 0), (0, 0), (0, f_pad - f))),
+            jnp.pad(w_up, ((0, 0), (0, 0), (0, f_pad - f))),
+        ],
+        axis=-1,
+    )
+    gu = moe_gemm(hp, w_gu, tile_expert, bm=bm, bn=bn, interpret=interp)
+    a = jax.nn.silu(gu[:, :f_pad].astype(jnp.float32)).astype(h.dtype) * gu[:, f_pad:]
+
+    # --- GEMM 2: down projection ---
+    w_dn = jnp.pad(w_down, ((0, 0), (0, f_pad - f), (0, d_pad - d)))
+    o = moe_gemm(a, w_dn, tile_expert, bm=bm, bn=bn, interpret=interp)
+    return o[:, :d].reshape(g, c_pad, d)[:, :c]

@@ -1,6 +1,8 @@
-"""Pure-jnp oracle for the grouped expert GEMM."""
+"""Pure-jnp oracles for the grouped expert GEMM and the fused
+grouped SwiGLU FFN built on it."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -17,3 +19,24 @@ def moe_gemm_ref(x: jnp.ndarray, w: jnp.ndarray, group_sizes: jnp.ndarray) -> jn
     expert_of = jnp.clip(expert_of, 0, e - 1)
     w_per_tok = jnp.take(w, expert_of, axis=0)  # [T, D, F]
     return jnp.einsum("td,tdf->tf", x, w_per_tok)
+
+
+def grouped_ffn_ref(
+    h: jnp.ndarray,  # [G, C, D] per-group token buffers
+    w_gate: jnp.ndarray,  # [E, D, F]
+    w_up: jnp.ndarray,  # [E, D, F]
+    w_down: jnp.ndarray,  # [E, F, D]
+    group_expert: jnp.ndarray | None = None,  # [G] weight row per group
+) -> jnp.ndarray:
+    """Grouped SwiGLU expert FFN oracle: group g runs the FFN of expert
+    `group_expert[g]` (identity when None, requiring G == E). This IS the
+    einsum path `models/moe.py` historically ran inline — the single
+    numerical contract the `moe_gemm`-based fused kernel must match."""
+    if group_expert is not None:
+        w_gate = jnp.take(w_gate, group_expert, axis=0)
+        w_up = jnp.take(w_up, group_expert, axis=0)
+        w_down = jnp.take(w_down, group_expert, axis=0)
+    g = jnp.einsum("ecd,edf->ecf", h, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", h, w_up)
+    a = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * u
+    return jnp.einsum("ecf,efd->ecd", a, w_down)

@@ -1,11 +1,13 @@
 """Backend dispatch and width bucketing for paged attention.
 
-`resolve_backend` maps the config-level choice ("auto" | "pallas" |
-"ref") to a concrete (backend, interpret) pair: the Pallas kernel runs
-natively on TPU and in interpret mode everywhere else (CPU CI still
-exercises the kernel path), "auto" picks the kernel on TPU and the jnp
-dense-gather reference off-TPU (interpret mode is far slower than XLA's
-fused gather on CPU, so it is opt-in there).
+`resolve_backend` here is a thin re-export of the shared
+`repro.kernels.backend.resolve_backend` (promoted there when the MoE
+kernel families adopted the same knob), partially applied so errors
+name `paged_attn_backend`: "auto" picks the Pallas kernel on TPU and
+the jnp dense-gather reference off-TPU (interpret mode is far slower
+than XLA's fused gather on CPU, so it is opt-in there), "pallas"
+forces the kernel (interpret mode off-TPU, CPU CI still exercises the
+kernel path), "ref" forces the dense-gather path.
 
 `active_block_width` is the single pow2 width-bucketing rule both
 serving phases slice block tables with: decode buckets by the longest
@@ -15,10 +17,8 @@ O(blocks_per_slot), at a bounded compile count.
 """
 from __future__ import annotations
 
-from typing import Tuple
-
-import jax
-
+from repro.kernels.backend import KernelBackend
+from repro.kernels.backend import resolve_backend as _resolve_backend
 from repro.kernels.paged_attention.paged_attention import (
     paged_decode_gqa,
     paged_decode_mla,
@@ -72,12 +72,7 @@ def n_width_buckets(max_blocks: int) -> int:
     return n
 
 
-def resolve_backend(choice: str) -> Tuple[str, bool]:
-    """(backend, interpret) for a config-level backend choice."""
-    on_tpu = jax.default_backend() == "tpu"
-    if choice == "auto":
-        return ("pallas", False) if on_tpu else ("ref", False)
-    if choice == "pallas":
-        return "pallas", not on_tpu
-    assert choice == "ref", f"unknown paged_attn_backend {choice!r}"
-    return "ref", False
+def resolve_backend(choice: str) -> KernelBackend:
+    """(backend, interpret) for a config-level backend choice — the
+    shared `kernels/backend.py` rule, erroring as `paged_attn_backend`."""
+    return _resolve_backend(choice, knob="paged_attn_backend")

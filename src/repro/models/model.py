@@ -213,7 +213,12 @@ def apply_layer(
 
     When `tiered_state` is given (serving path of MoE archs), the routed
     experts execute through the TriMoE three-tier runtime
-    (serving/tiered_moe.py) instead of the flat training MoE.
+    (serving/tiered_moe.py) instead of the flat training MoE. Either
+    way the expert FFN obeys `cfg.moe_backend` (kernels/backend.py):
+    "pallas" runs decode steps on the batched expert GEMV and
+    prefill/full passes on the fused grouped MoE GEMM; "ref" keeps the
+    grouped einsums ("auto" = pallas on TPU, ref elsewhere) — the same
+    resolution rule `cfg.paged_attn_backend` uses for attention.
 
     `token_mask` marks real tokens. In decode mode ([B, 1]) it masks
     dead batch slots out of MoE dispatch/counts. In full mode ([B, S],

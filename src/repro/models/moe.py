@@ -3,8 +3,17 @@
 Dispatch is scatter/gather (argsort by expert id -> capacity-bounded
 expert buffers -> grouped FFN -> weighted combine), NOT one-hot einsum:
 for E=160 experts a one-hot dispatch matmul would add ~1000x the useful
-FLOPs and poison the roofline. The grouped FFN einsums here are exactly
-what `kernels/moe_gemm` implements as a Pallas kernel on TPU.
+FLOPs and poison the roofline.
+
+The expert FFN over the dispatched buffers routes through the shared
+kernel-backend API (`cfg.moe_backend`, kernels/backend.py): when it
+resolves to "pallas", prefill-shaped buffers run the fused grouped MoE
+GEMM (`kernels/moe_gemm.grouped_expert_ffn`, MXU-aligned tiles, one
+wide gate+up GEMM) and decode-shaped buffers (S == 1, small capacity)
+run the batched expert GEMV (`kernels/expert_gemv.cold_expert_ffn`,
+weights streamed past the resident tokens exactly once); "ref" keeps
+the inline grouped einsums. `moe_forward(backend=...)` overrides the
+config per call, mirroring `gqa/mla_decode_paged(backend=...)`.
 
 Returns per-expert token counts alongside the output — the load signal
 the TriMoE predictor/scheduler (core/) consumes.
@@ -16,6 +25,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.expert_gemv import cold_expert_ffn
+from repro.kernels.moe_gemm import grouped_expert_ffn
+from repro.kernels.moe_gemm.ref import grouped_ffn_ref
 from repro.models.layers import Params, dense_init
 
 
@@ -75,12 +87,43 @@ def router_topk(logits: jnp.ndarray, k: int):
     return probs, w, idx
 
 
+def moe_backend(cfg, backend: str | None = None):
+    """Resolve the expert-FFN backend: an explicit `backend` overrides
+    `cfg.moe_backend` through the shared kernels/backend.py rule ("auto"
+    = Pallas kernels on TPU, grouped einsums elsewhere; "pallas" forces
+    the kernels, interpret mode off-TPU, so CPU CI exercises the kernel
+    path; "ref" forces the einsums)."""
+    from repro.kernels.backend import resolve_backend
+
+    return resolve_backend(
+        backend or getattr(cfg, "moe_backend", "auto"), knob="moe_backend"
+    )
+
+
 def grouped_ffn(h: jnp.ndarray, w_gate, w_up, w_down) -> jnp.ndarray:
-    """h: [E, C, D] expert buffers -> [E, C, D]. (= moe_gemm kernel ref)"""
-    g = jnp.einsum("ecd,edf->ecf", h, w_gate)
-    u = jnp.einsum("ecd,edf->ecf", h, w_up)
-    a = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * u
-    return jnp.einsum("ecf,efd->ecd", a, w_down)
+    """h: [E, C, D] expert buffers -> [E, C, D]: the einsum reference
+    (kernels/moe_gemm's oracle, shared so kernel parity is structural)."""
+    return grouped_ffn_ref(h, w_gate, w_up, w_down)
+
+
+def expert_ffn(h: jnp.ndarray, w_gate, w_up, w_down, *, kind: str = "ref",
+               decode: bool = False, group_expert=None) -> jnp.ndarray:
+    """Expert FFN over dispatched buffers h [G, C, D], routed by the
+    resolved backend `kind`:
+
+      ref    -> the grouped einsums (XLA; the kernels' shared oracle)
+      pallas -> decode buffers (S == 1 dispatch, C small, weight-read
+                bound) hit the batched expert GEMV; everything else the
+                fused grouped MoE GEMM (MXU-aligned tiles).
+
+    `group_expert` maps buffer groups to expert weight rows when G != E
+    (the per-row dispatch's [B*E] groups)."""
+    if kind != "pallas":
+        return grouped_ffn_ref(h, w_gate, w_up, w_down, group_expert)
+    if decode and group_expert is None:
+        return cold_expert_ffn(h, w_gate, w_up, w_down, backend="pallas")
+    return grouped_expert_ffn(h, w_gate, w_up, w_down, group_expert,
+                              backend="pallas")
 
 
 def shared_ffn(p: Params, x: jnp.ndarray) -> jnp.ndarray:
@@ -92,7 +135,7 @@ def shared_ffn(p: Params, x: jnp.ndarray) -> jnp.ndarray:
 
 def moe_forward(
     p: Params, cfg, x: jnp.ndarray, *, capacity_factor=None, full_capacity=False,
-    grouped: bool | None = None, token_mask=None,
+    grouped: bool | None = None, token_mask=None, backend: str | None = None,
 ) -> MoEOutput:
     """Routed MoE. Two dispatch strategies:
 
@@ -111,24 +154,32 @@ def moe_forward(
     assignments take a sentinel expert id so the row-local sort parks
     them past every real assignment (bucketed prefill under sharded
     all-to-all dispatch).
+
+    `backend` overrides `cfg.moe_backend` for this call (see
+    `moe_backend()`); dispatch/combine are backend-invariant, only the
+    expert FFN over the dispatched buffers switches implementation.
     """
     mo = cfg.moe
     b, s, d = x.shape
+    kind, _ = moe_backend(cfg, backend)
     if grouped is None:
-        # measured trade-off (§Perf): grouped dispatch cuts the expert-GEMM
-        # compute term 8x but GSPMD lowers its buffer exchange as
-        # all-gathers (+24% collective bytes); the global path stays the
-        # default until the shard_map all-to-all variant lands.
+        # dispatch-strategy trade-off (§Perf, re-measured under the kernel
+        # path): the Pallas backend equalizes the expert-FFN compute shape
+        # between strategies (both feed the same grouped GEMM tiles), but
+        # GSPMD still lowers the grouped path's [B, E, C, D] buffer
+        # exchange as all-gathers (+24% collective bytes), so the global
+        # path remains the default until the shard_map all-to-all variant
+        # lands. Revisit the default with that variant, not the backend.
         grouped = False
     if grouped:
         return _moe_forward_grouped(p, cfg, x, capacity_factor, full_capacity,
-                                    token_mask)
+                                    token_mask, kind=kind)
     return _moe_forward_global(p, cfg, x, capacity_factor, full_capacity,
-                               token_mask)
+                               token_mask, kind=kind)
 
 
 def _moe_forward_global(p, cfg, x, capacity_factor, full_capacity,
-                        token_mask=None) -> MoEOutput:
+                        token_mask=None, kind: str = "ref") -> MoEOutput:
     mo = cfg.moe
     e, k = mo.n_experts, mo.top_k
     b, s, d = x.shape
@@ -166,7 +217,10 @@ def _moe_forward_global(p, cfg, x, capacity_factor, full_capacity,
     # --- dispatch: scatter into [E*cap(+1), D] buffers ---
     buf = jnp.zeros((e * cap + 1, d), x.dtype).at[slot].set(flat[st])
     h = buf[: e * cap].reshape(e, cap, d)
-    o = grouped_ffn(h, p["w_gate"], p["w_up"], p["w_down"])
+    # decode steps (S == 1) are the small-capacity weight-read-bound
+    # regime the batched GEMV targets; everything else is GEMM-shaped
+    o = expert_ffn(h, p["w_gate"], p["w_up"], p["w_down"], kind=kind,
+                   decode=(s == 1))
     obuf = jnp.concatenate([o.reshape(e * cap, d), jnp.zeros((1, d), o.dtype)])
 
     # --- combine: gather back + weighted sum over the k assignments ---
@@ -193,7 +247,7 @@ def _moe_forward_global(p, cfg, x, capacity_factor, full_capacity,
 
 
 def _moe_forward_grouped(p, cfg, x, capacity_factor, full_capacity=False,
-                         token_mask=None) -> MoEOutput:
+                         token_mask=None, kind: str = "ref") -> MoEOutput:
     """Per-row dispatch: [B, S, D] -> buffers [B, E, C, D] -> expert FFN
     -> combine. All sorting is row-local; sharding B over `data` and E
     over `model` makes the dispatch one all-to-all.
@@ -246,11 +300,22 @@ def _moe_forward_grouped(p, cfg, x, capacity_factor, full_capacity=False,
         # rows stay on their data shard; expert dim moves via all-to-all
         h = _hint(h, dpa, ep, None, None)
 
-    # expert FFN over row-grouped buffers (EP all-to-all happens here)
-    g = jnp.einsum("becd,edf->becf", h, p["w_gate"])
-    u = jnp.einsum("becd,edf->becf", h, p["w_up"])
-    a = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * u
-    o = jnp.einsum("becf,efd->becd", a, p["w_down"])
+    # expert FFN over row-grouped buffers (EP all-to-all happens here).
+    # The kernel path flattens [B, E, C, D] to B*E groups over the SAME
+    # [E, D, F] weights via the fused GEMM's group->expert indirection
+    # (tile b copies of arange(E)) — no weight replication, each row's
+    # buffers stream the one shared weight panel per expert.
+    if kind == "pallas":
+        ge = jnp.tile(jnp.arange(e, dtype=jnp.int32), b)
+        o = expert_ffn(
+            h.reshape(b * e, cap, d), p["w_gate"], p["w_up"], p["w_down"],
+            kind=kind, group_expert=ge,
+        ).reshape(b, e, cap, d)
+    else:
+        g = jnp.einsum("becd,edf->becf", h, p["w_gate"])
+        u = jnp.einsum("becd,edf->becf", h, p["w_up"])
+        a = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * u
+        o = jnp.einsum("becf,efd->becd", a, p["w_down"])
     if _SHARDING_HINTS is not None:
         dp, ep = _SHARDING_HINTS
         dpa = dp if len(dp) > 1 else dp[0]

@@ -180,6 +180,16 @@ class TriMoEServingEngine:
         self.domains = TPUDomains()
         self.shape = ExpertShape(cfg.d_model, cfg.moe.d_expert)
         self.stats = EngineStats()
+        # resolved kernel backends this engine's jitted closures capture
+        # (kernels/backend.py; cfg.moe_backend / cfg.paged_attn_backend) —
+        # observability for serving_bench's backend comparisons
+        from repro.kernels.paged_attention import resolve_backend
+        from repro.models.moe import moe_backend
+
+        self.moe_backend = moe_backend(cfg)
+        self.paged_attn_backend = resolve_backend(
+            getattr(cfg, "paged_attn_backend", "auto")
+        )
         self._step = jax.jit(
             lambda p, t, c, pos, ts: decode_step(
                 p, cfg, t, c, pos, tiered=ts,

@@ -163,7 +163,12 @@ class ServingLoop:
     ("auto" | "pallas" | "ref", default the config's setting) picks the
     chunked Pallas paged-attention kernel family
     (kernels/paged_attention — decode is the chunk-of-1 case) or the
-    jnp dense-gather path.
+    jnp dense-gather path. `moe_backend` is the same knob for the
+    expert-FFN hot path (kernels/moe_gemm grouped GEMM for prefill
+    buffers, kernels/expert_gemv batched GEMV for decode buffers, or
+    the einsum reference); both resolve through the one
+    `kernels/backend.py` rule and land in the config the engine's
+    jitted step closures capture.
 
     Admission prefill is CHUNKED and PIGGYBACKED by default
     (`chunked_prefill=True`, paged layout + attention-only archs): an
@@ -202,6 +207,7 @@ class ServingLoop:
         kv_pool_blocks: Optional[int] = None,
         prefix_cache: bool = True,
         paged_attn_backend: Optional[str] = None,
+        moe_backend: Optional[str] = None,
         chunked_prefill: bool = True,
         prefill_chunk_tokens: Optional[int] = None,
     ):
@@ -209,6 +215,8 @@ class ServingLoop:
         assert kv_layout in ("paged", "slots"), kv_layout
         if paged_attn_backend is not None:
             cfg = dataclasses.replace(cfg, paged_attn_backend=paged_attn_backend)
+        if moe_backend is not None:
+            cfg = dataclasses.replace(cfg, moe_backend=moe_backend)
         self.cfg = cfg
         self.paged = kv_layout == "paged"
         from repro.serving.paged_kv import prefix_cacheable

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import Params, dense_init
-from repro.models.moe import grouped_ffn, router_topk, shared_ffn
+from repro.models.moe import expert_ffn, moe_backend, router_topk, shared_ffn
 
 HOT_T, WARM_T, COLD_T = 0, 1, 2
 TIER_KEYS = ("hot", "warm", "cold")
@@ -103,9 +103,13 @@ def init_tiered_state(rng, cfg, sizes: TierSizes, pad_cold_to: int = 16) -> Para
     }
 
 
-def _tier_ffn(w: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
-    """w: [n, 3, D, F]; h: [n, C, D] -> [n, C, D]."""
-    return grouped_ffn(h, w[:, 0], w[:, 1], w[:, 2].transpose(0, 2, 1))
+def _tier_ffn(w: jnp.ndarray, h: jnp.ndarray, kind: str = "ref",
+              decode: bool = False) -> jnp.ndarray:
+    """w: [n, 3, D, F]; h: [n, C, D] -> [n, C, D], routed by the
+    resolved `cfg.moe_backend` kind: the Pallas grouped GEMM / batched
+    GEMV kernels or the grouped einsums (models/moe.expert_ffn)."""
+    return expert_ffn(h, w[:, 0], w[:, 1], w[:, 2].transpose(0, 2, 1),
+                      kind=kind, decode=decode)
 
 
 def _dispatch_tier(flat, st, sw, tier_slot, in_tier, n_slots, cap):
@@ -132,6 +136,7 @@ def tiered_moe_forward(
     x: jnp.ndarray,  # [B, S, D] (decode: S == 1)
     cold_capacity_frac: float = 0.25,
     token_mask: jnp.ndarray | None = None,  # [B, S] or [B*S] bool
+    backend: str | None = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Returns (y, expert_counts[E]).
 
@@ -142,10 +147,16 @@ def tiered_moe_forward(
 
     token_mask: invalid tokens (dead batch slots padded into a fixed-
     width zigzag group) are excluded from dispatch and from the expert
-    counts, so the load predictor never sees phantom routing."""
+    counts, so the load predictor never sees phantom routing.
+
+    backend: per-call override of `cfg.moe_backend` — each tier's FFN
+    runs the Pallas kernels (decode steps the batched GEMV, prefill the
+    fused grouped GEMM) or the einsum reference; dispatch/combine and
+    the migration machinery are backend-invariant."""
     mo = cfg.moe
     e, k = mo.n_experts, mo.top_k
     b, s, d = x.shape
+    kind, _ = moe_backend(cfg, backend)
     t = b * s
     flat = x.reshape(t, d)
 
@@ -176,7 +187,7 @@ def tiered_moe_forward(
         h, dst, ok = _dispatch_tier(
             flat, a_tok, a_w, a_slot, in_tier, n_slots, cap
         )
-        o = _tier_ffn(state[key], h)
+        o = _tier_ffn(state[key], h, kind=kind, decode=(s == 1))
         obuf = jnp.concatenate(
             [o.reshape(n_slots * cap, d), jnp.zeros((1, d), o.dtype)]
         )

@@ -7,7 +7,12 @@ import pytest
 
 from repro.kernels.expert_gemv import cold_expert_ffn, expert_ffn_ref
 from repro.kernels.flash_attention import mha
-from repro.kernels.moe_gemm import grouped_expert_matmul, moe_gemm_ref
+from repro.kernels.moe_gemm import (
+    grouped_expert_ffn,
+    grouped_expert_matmul,
+    grouped_ffn_ref,
+    moe_gemm_ref,
+)
 
 
 def _rand(rng, shape, dtype, scale=0.1):
@@ -24,12 +29,52 @@ def test_moe_gemm_matches_oracle(dtype, t, d, f, e):
     x = _rand(rng, (t, d), dtype, 0.5)
     eo = jnp.asarray(rng.integers(0, e, t), jnp.int32)
     w = _rand(rng, (e, d, f), dtype)
-    got = grouped_expert_matmul(x, eo, w, capacity=t + e * 128, interpret=True)
+    got = grouped_expert_matmul(x, eo, w, capacity=t + e * 128, backend="pallas")
     ref = jnp.einsum("td,tdf->tf", x.astype(jnp.float32),
                      w[eo].astype(jnp.float32))
     tol = 1e-5 if dtype == jnp.float32 else 2e-2
     np.testing.assert_allclose(
         np.asarray(got, np.float32), np.asarray(ref), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("e,c,d,f", [
+    (4, 16, 64, 32),     # every dim off-tile: exercises all padding
+    (3, 128, 128, 128),  # tile-aligned
+    (1, 5, 48, 96),      # single expert, tiny capacity
+])
+def test_grouped_expert_ffn_matches_oracle(dtype, e, c, d, f):
+    """Fused gate/up/silu/down grouped FFN == the einsum oracle the
+    model layer historically ran inline (any C/D/F, zero-pad exact)."""
+    rng = np.random.default_rng(hash((e, c, d, f)) % 2**31)
+    h = _rand(rng, (e, c, d), dtype, 0.5)
+    wg, wu = _rand(rng, (e, d, f), dtype), _rand(rng, (e, d, f), dtype)
+    wd = _rand(rng, (e, f, d), dtype)
+    got = grouped_expert_ffn(h, wg, wu, wd, backend="pallas")
+    ref = grouped_ffn_ref(h, wg, wu, wd)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+@pytest.mark.slow
+def test_grouped_expert_ffn_group_indirection():
+    """G groups > E experts: the group->expert map streams the one
+    shared weight panel per expert (the per-row dispatch's B*E case)."""
+    rng = np.random.default_rng(11)
+    e, g, c, d, f = 3, 7, 9, 64, 40
+    h = _rand(rng, (g, c, d), jnp.float32, 0.5)
+    wg, wu = _rand(rng, (e, d, f), jnp.float32), _rand(rng, (e, d, f), jnp.float32)
+    wd = _rand(rng, (e, f, d), jnp.float32)
+    ge = jnp.asarray(rng.integers(0, e, g), jnp.int32)
+    got = grouped_expert_ffn(h, wg, wu, wd, ge, backend="pallas")
+    ref = grouped_ffn_ref(h, wg, wu, wd, ge)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref), rtol=2e-5, atol=2e-5
     )
 
 
@@ -56,7 +101,7 @@ def test_expert_gemv_matches_oracle(dtype, e, c, d, f, bf):
     x = _rand(rng, (e, c, d), dtype, 0.5)
     w1, w3 = _rand(rng, (e, d, f), dtype), _rand(rng, (e, d, f), dtype)
     w2 = _rand(rng, (e, f, d), dtype)
-    got = cold_expert_ffn(x, w1, w3, w2, bf=bf, interpret=True)
+    got = cold_expert_ffn(x, w1, w3, w2, bf=bf, backend="pallas")
     ref = jax.vmap(expert_ffn_ref)(x, w1, w3, w2)
     tol = 1e-5 if dtype == jnp.float32 else 3e-2
     np.testing.assert_allclose(
@@ -79,8 +124,8 @@ def test_flash_attention_matches_oracle(dtype, causal, b, h, sq, sk, dh, bq, bk)
     q = _rand(rng, (b, sq, h, dh), dtype, 1.0)
     k = _rand(rng, (b, sk, h, dh), dtype, 1.0)
     v = _rand(rng, (b, sk, h, dh), dtype, 1.0)
-    got = mha(q, k, v, causal=causal, bq=bq, bk=bk, interpret=True)
-    ref = mha(q, k, v, causal=causal, use_ref=True)
+    got = mha(q, k, v, causal=causal, bq=bq, bk=bk, backend="pallas")
+    ref = mha(q, k, v, causal=causal, backend="ref")
     tol = 2e-5 if dtype == jnp.float32 else 3e-2
     np.testing.assert_allclose(
         np.asarray(got, np.float32), np.asarray(ref, np.float32),
@@ -99,7 +144,7 @@ def test_flash_attention_matches_model_attention():
     k = _rand(rng, (b, s, h, dh), jnp.float32, 1.0)
     v = _rand(rng, (b, s, h, dh), jnp.float32, 1.0)
     model_out = _grouped_attention(q, k, v, causal=True, q_chunk=64)
-    kern_out = mha(q, k, v, causal=True, bq=64, bk=64, interpret=True)
+    kern_out = mha(q, k, v, causal=True, bq=64, bk=64, backend="pallas")
     np.testing.assert_allclose(
         np.asarray(model_out), np.asarray(kern_out), rtol=2e-4, atol=2e-4
     )
