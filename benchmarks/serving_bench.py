@@ -37,6 +37,18 @@ differ (the nightly MoE kernel-parity gate) and records the pallas/ref
 tokens/s ratio; --min-moe-speedup gates it (0 on CPU, where interpret
 mode is slower; raise on TPU runners).
 
+Skew mode (--skew): saves/loads a skew-churn RequestTrace (Zipf token
+populations with a mid-stream phase shift, bursty arrivals) and
+replays it through the live loop three ways — an untimed
+forced-migration leg (plan_min>=1) that gates fp32 dynamic-vs-static
+token identity, migrations > 0, and zero hysteresis thrash; an
+interleaved best-of-N timed leg (cost-model-driven sizing, plan_min=0)
+whose dynamic/static tokens-per-s ratio is recorded as "speedup" and
+gated vs --min-skew-ratio per run and vs the committed baseline
+nightly; and a deterministic flagship-scale simulator leg
+(--sim-arch) where relayout ON must beat relayout OFF on moe_time
+after the trace's phase shifts (--min-makespan-ratio).
+
 Results merge into one JSON keyed by mode, so CI can run --mixed,
 --prefix, and --moe into the same BENCH_serving.json artifact.
 
@@ -681,6 +693,307 @@ def run_moe(args) -> int:
     return rc
 
 
+# ------------------------------------------------------- skew-churn mode
+def run_skew(args) -> int:
+    """Skew-churn replay: a saved RequestTrace (skewed, phase-shifting
+    Zipf token population with bursty arrivals) is served twice through
+    the SAME SchedulerPolicy — live (dynamic tier scheduling: observe ->
+    plan_migrations -> double-buffered apply) vs `freeze=True` (static
+    tiers frozen at their initial layout) — in fp32, where migrations
+    are exact weight swaps and the two token streams must be IDENTICAL
+    (placement can never change what the model computes; any divergence
+    is a migration bug and the mode exits nonzero).
+
+    The trace is written to `--skew-trace`, reloaded, round-trip
+    verified, and the LOADED copy is what both serves replay — the
+    on-disk format is part of the contract.
+
+    Three legs:
+      * correctness (untimed): `plan_min=1` forces migrations every
+        replan, so the identity gate exercises real weight swaps; the
+        hysteresis regression (oscillating loads inside the
+        +/-hysteresis band around tau_hot) must add ZERO thrash events;
+      * timed ratio: the pure cost-gated policy (`plan_min=0`) vs
+        frozen, interleaved best-of-N passes. At smoke scale every
+        candidate move fails breakeven, so a correct cost model
+        migrates nothing and dynamic scheduling costs only the planner
+        itself — the ratio centers at ~1.0 (--min-skew-ratio carries
+        per-run noise headroom; the committed BENCH_serving.json value
+        is the nightly machine-relative reference via --baseline-frac,
+        with a thrash ceiling on top);
+      * simulator (deterministic): relayout ON vs OFF makespan on the
+        flagship --sim-arch under a phase-shifting RoutingTrace (the
+        static layout is drawn from the trace head and goes stale at
+        each shift) must hold --min-makespan-ratio — the leg that shows
+        dynamic scheduling WINNING at the offloading regime, where
+        migration cost fits the overlap window.
+    """
+    import dataclasses
+
+    import numpy as np
+
+    from repro.core.policy import SchedulerPolicy
+    from repro.core.simulator import SimFlags, SimModel, TriMoESimulator
+    from repro.core.tiers import TierThresholds
+    from repro.core.traces import (
+        TRACE_SUFFIX,
+        RoutingTrace,
+        TraceSpec,
+        load_trace,
+        synth_request_trace,
+    )
+    from repro.serving.loop import LoopStats
+    from repro.serving.replay import replay_requests
+
+    cfg = reduce_for_smoke(get_config(args.arch))
+    # fp32: migrations are exact swaps, so dynamic vs frozen scheduling
+    # cannot flip a single sampled token and identity is a hard gate
+    cfg = dataclasses.replace(
+        cfg, param_dtype="float32", compute_dtype="float32"
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n_requests = 10 if args.smoke else args.requests
+    new_tokens = 12 if args.smoke else args.new_tokens
+
+    # ---- the workload is a FILE: synth -> save -> load -> verify ----
+    trace_path = args.skew_trace
+    if not trace_path.endswith(TRACE_SUFFIX):
+        trace_path += TRACE_SUFFIX
+    synth = synth_request_trace(
+        n_requests, cfg.vocab_size, prompt_len=args.prompt_len,
+        prompt_len_jitter=4, new_tokens=new_tokens, n_phases=2,
+        burst=2, gap_steps=2, seed=11,
+    )
+    synth.save(trace_path)
+    trace = load_trace(trace_path)
+    round_trip = (
+        np.array_equal(trace.arrival_step, synth.arrival_step)
+        and np.array_equal(trace.prompt_lens, synth.prompt_lens)
+        and np.array_equal(trace.prompt_tokens, synth.prompt_tokens)
+        and np.array_equal(trace.new_tokens, synth.new_tokens)
+        and trace.meta == synth.meta
+    )
+    cache_len = int(trace.prompt_lens.max()) + new_tokens + 2
+
+    # smoke-scale tier thresholds: per-step expert counts are tiny
+    # (group rows x top_k), so the defaults (tuned for aggregated
+    # batches) would classify everything cold and give the scheduler
+    # nothing to do
+    policy = SchedulerPolicy(
+        thresholds=TierThresholds(
+            tau_hot=args.skew_tau_hot, tau_cold=args.skew_tau_cold
+        )
+    )
+    lean = dataclasses.replace(
+        policy, plan_min=0, replan_every=args.skew_replan_every
+    )
+    frozen = dataclasses.replace(policy, freeze=True)
+
+    def make_loop(pol):
+        return ServingLoop(
+            cfg, params, batch_size=args.skew_batch,
+            n_groups=args.skew_groups, cache_len=cache_len, scheduler=pol,
+        )
+
+    with CompileCounter() as cc:
+        # --- correctness leg (untimed): forced migrations vs frozen ---
+        loop_dyn = make_loop(policy)
+        res_dyn = replay_requests(loop_dyn, trace)
+        st_dyn, done_dyn = loop_dyn.stats, len(res_dyn.completions)
+        toks_dyn = res_dyn.tokens()
+        loop_fro = make_loop(frozen)
+        res_fro = replay_requests(loop_fro, trace)  # timed-leg warmup too
+        done_fro = len(res_fro.completions)
+        toks_sta = res_fro.tokens()
+        identical = toks_dyn == toks_sta
+
+        # --- timed leg: cost-gated lean vs frozen, interleaved ---
+        loop_lean = make_loop(lean)
+        replay_requests(loop_lean, trace)  # warmup (compile)
+        st_lean = st_fro = None
+        done_lean = 0
+        for _ in range(max(1, args.bench_repeats)):
+            loop_lean.stats = LoopStats()
+            done_lean = len(replay_requests(loop_lean, trace).completions)
+            if st_lean is None or loop_lean.stats.tokens_per_s > st_lean.tokens_per_s:
+                st_lean = loop_lean.stats
+            loop_fro.stats = LoopStats()
+            replay_requests(loop_fro, trace)
+            if st_fro is None or loop_fro.stats.tokens_per_s > st_fro.tokens_per_s:
+                st_fro = loop_fro.stats
+    ratio = st_lean.tokens_per_s / max(st_fro.tokens_per_s, 1e-9)
+
+    # ---- hysteresis regression: oscillating loads just inside the
+    # +/-hysteresis band around tau_hot must never flip tiers back and
+    # forth (at most one initial transition; a return within
+    # policy.thrash_window replans would count as a thrash event).
+    # Runs on the dynamic loop's WARM engine via the synchronous replan
+    # path, AFTER the timed stats above were captured.
+    eng = loop_dyn.engine
+    n_moe = len(eng.predictor.ema)
+    e = cfg.moe.n_experts
+    tau = float(policy.thresholds.tau_hot)
+    thrash_before = eng.stats.thrash_events
+    for r in range(12):
+        load = (1.1 if r % 2 else 0.9) * tau
+        counts = np.full((n_moe, e), load, np.float64)
+        eng.replan(counts)
+    hysteresis_thrash = eng.stats.thrash_events - thrash_before
+
+    # ---- deterministic leg: cost-model makespan, relayout ON vs OFF,
+    # on the flagship offloading-regime config under a phase-shifting
+    # RoutingTrace (same on-disk format, round-tripped through its own
+    # scratch file). The offline layout comes from the trace head, so
+    # the frozen run goes stale at each shift.
+    sim_cfg = get_config(args.sim_arch)
+    sim_layers = sum(sim_cfg.uses_moe_layer(i) for i in range(sim_cfg.n_layers))
+    sim_steps = args.sim_steps
+    spec = TraceSpec(
+        n_steps=sim_steps, n_layers=sim_layers,
+        n_experts=sim_cfg.moe.n_experts, top_k=sim_cfg.moe.top_k,
+        tokens_per_step=args.sim_tokens,
+        phase_steps=(sim_steps // 3, 2 * sim_steps // 3), seed=3,
+    )
+    routing_path = trace_path[: -len(TRACE_SUFFIX)] + "_routing" + TRACE_SUFFIX
+    RoutingTrace.from_spec(spec).save(routing_path)
+    rt = load_trace(routing_path)
+    sim_model = SimModel.from_config(sim_cfg)
+    warm = args.sim_warmup
+    sim_on = TriMoESimulator(
+        sim_model, rt.loads,
+        SimFlags(policy="trimoe", warmup_steps=warm, enable_relayout=True),
+    ).run(sim_steps - warm)
+    sim_off = TriMoESimulator(
+        sim_model, rt.loads,
+        SimFlags(policy="trimoe", warmup_steps=warm, enable_relayout=False),
+    ).run(sim_steps - warm)
+    makespan_ratio = sim_off.moe_time / max(sim_on.moe_time, 1e-12)
+
+    print(f"[serving_bench] skew replay: {n_requests} requests from "
+          f"{os.path.basename(trace_path)} "
+          f"({len(trace.meta.get('phase_starts', []))} token phases, "
+          f"bursty arrivals), fp32, tau_hot={args.skew_tau_hot} "
+          f"tau_cold={args.skew_tau_cold}")
+    print(f"[serving_bench] forced-migration leg: {st_dyn.summary()}")
+    print(f"[serving_bench] timed dynamic: {st_lean.summary()}")
+    print(f"[serving_bench] timed static:  {st_fro.summary()}")
+    print(f"[serving_bench] dynamic/static tokens/s {ratio:.3f}x "
+          f"(floor {args.min_skew_ratio}x); tokens identical: {identical}; "
+          f"round-trip ok: {round_trip}; hysteresis thrash: "
+          f"{hysteresis_thrash}; backend compiles: {cc.count}")
+    print(f"[serving_bench] simulator ({sim_cfg.name}, "
+          f"{args.sim_tokens} tok/step, phases at {spec.phase_steps}): "
+          f"relayout-off/on makespan {makespan_ratio:.3f}x "
+          f"(floor {args.min_makespan_ratio}x), "
+          f"{sim_on.migrations_executed} migrations, visible overhead "
+          f"{sim_on.migration_overhead / max(sim_on.step_time, 1e-12):.4f}")
+
+    result = {
+        "arch": cfg.name,
+        "requests": n_requests,
+        "new_tokens": new_tokens,
+        "batch": args.skew_batch,
+        "groups": args.skew_groups,
+        "dtype": "float32",
+        "trace": os.path.basename(trace_path),
+        "trace_phases": list(trace.meta.get("phase_starts", [])),
+        "tau_hot": args.skew_tau_hot,
+        "tau_cold": args.skew_tau_cold,
+        "replan_every_timed": args.skew_replan_every,
+        "tokens_per_s_dynamic": round(st_lean.tokens_per_s, 1),
+        "tokens_per_s_static": round(st_fro.tokens_per_s, 1),
+        "speedup": round(ratio, 3),
+        "tokens_identical": identical,
+        "replans": st_dyn.replans,
+        "migrations": st_dyn.migrations,
+        "migrations_per_replan": round(st_dyn.migrations_per_replan, 2),
+        "thrash_events": st_dyn.thrash_events,
+        "hysteresis_thrash": hysteresis_thrash,
+        "plan_p95_ms": round(st_dyn.plan_p95_s * 1e3, 2),
+        "predictor_accuracy": round(st_dyn.predictor_accuracy, 3),
+        "sim_arch": sim_cfg.name,
+        "sim_makespan_ratio": round(makespan_ratio, 3),
+        "sim_migrations": sim_on.migrations_executed,
+        "sim_overhead_frac": round(
+            sim_on.migration_overhead / max(sim_on.step_time, 1e-12), 4
+        ),
+        "backend_compiles": cc.count,
+    }
+    # snapshot the committed baseline BEFORE (possibly) overwriting it
+    baseline = (
+        _baseline_entry(args.baseline_json, "skew")
+        if args.baseline_json else None
+    )
+    if args.json:
+        write_json(args.json, "skew", result)
+
+    rc = 0
+    if not round_trip:
+        print("[serving_bench] FAIL: trace save->load round-trip is not "
+              "bit-identical")
+        rc = 1
+    if done_dyn != n_requests or done_fro != n_requests or done_lean != n_requests:
+        print(f"[serving_bench] FAIL: incomplete replay (forced {done_dyn}, "
+              f"static {done_fro}, timed dynamic {done_lean} of "
+              f"{n_requests})")
+        rc = 1
+    if not identical:
+        diff = [i for i, (a, b) in enumerate(zip(toks_dyn, toks_sta))
+                if a != b]
+        print(f"[serving_bench] FAIL: fp32 token streams diverge between "
+              f"dynamic and static scheduling (requests {diff}) — "
+              f"migrations changed what the model computes")
+        rc = 1
+    if st_dyn.migrations <= 0:
+        print("[serving_bench] FAIL: dynamic scheduling executed zero "
+              "migrations on a skew-churn trace (the scheduler is inert)")
+        rc = 1
+    if hysteresis_thrash != 0:
+        print(f"[serving_bench] FAIL: {hysteresis_thrash} thrash events "
+              f"under oscillating loads inside the hysteresis band")
+        rc = 1
+    if sim_on.migrations_executed <= 0:
+        print("[serving_bench] FAIL: simulator relayout executed zero "
+              "migrations at the offloading regime")
+        rc = 1
+    if makespan_ratio < args.min_makespan_ratio:
+        print(f"[serving_bench] FAIL: relayout makespan ratio "
+              f"{makespan_ratio:.3f}x < floor {args.min_makespan_ratio}x")
+        rc = 1
+    if ratio < args.min_skew_ratio:
+        print(f"[serving_bench] FAIL: dynamic/static tokens/s "
+              f"{ratio:.3f}x < floor {args.min_skew_ratio}x")
+        rc = 1
+    if args.baseline_json:
+        if baseline is None:
+            print(f"[serving_bench] note: no skew baseline in "
+                  f"{args.baseline_json}; gate skipped")
+        else:
+            # machine-relative: the dynamic/static ratio measured in
+            # this run must hold the committed level
+            base_ratio = baseline.get("speedup")
+            if base_ratio is not None:
+                floor = args.baseline_frac * float(base_ratio)
+                ok = ratio >= floor
+                print(f"[serving_bench] {'ok' if ok else 'FAIL'}: skew "
+                      f"ratio {ratio:.3f}x vs baseline "
+                      f"{float(base_ratio):.3f}x (floor {floor:.3f}x = "
+                      f"{args.baseline_frac}x)")
+                rc = rc if ok else 1
+            # thrash ceiling: replay thrash may not blow past the
+            # committed level (slack: doubling or +2, whichever is
+            # looser, absorbs trace-shape jitter)
+            base_thrash = baseline.get("thrash_events")
+            if base_thrash is not None:
+                ceil = max(2 * int(base_thrash), int(base_thrash) + 2)
+                ok = st_dyn.thrash_events <= ceil
+                print(f"[serving_bench] {'ok' if ok else 'FAIL'}: replay "
+                      f"thrash {st_dyn.thrash_events} vs baseline "
+                      f"{base_thrash} (ceiling {ceil})")
+                rc = rc if ok else 1
+    return rc
+
+
 def _baseline_entry(path, mode):
     """The committed result dict for `mode` (BENCH_serving.json), or
     None when the file/section is missing, unreadable, or carries no
@@ -792,6 +1105,48 @@ def main(argv=None):
                          "(0 on CPU runners: interpret-mode kernels are "
                          "slower than the einsum; raise on TPU where "
                          "the kernel path must win)")
+    ap.add_argument("--skew", action="store_true",
+                    help="skew-churn replay: a saved RequestTrace served "
+                         "dynamic vs frozen-static tiers in fp32; gates "
+                         "token identity, trace round-trip, zero "
+                         "hysteresis thrash, the simulator relayout "
+                         "makespan ratio, and the dynamic/static "
+                         "tokens/s ratio")
+    ap.add_argument("--skew-trace", default="skew_replay",
+                    help="scratch path for the replayed RequestTrace "
+                         "(the .trace.npz suffix is appended if missing; "
+                         "a _routing sibling holds the simulator trace)")
+    ap.add_argument("--skew-batch", type=int, default=4)
+    ap.add_argument("--skew-groups", type=int, default=2)
+    ap.add_argument("--skew-tau-hot", type=float, default=6.0,
+                    help="hot-tier threshold for the replay policy "
+                         "(smoke-scale per-step counts are group rows x "
+                         "top_k, far below the aggregated-batch defaults)")
+    ap.add_argument("--skew-tau-cold", type=float, default=1.0)
+    ap.add_argument("--skew-replan-every", type=int, default=2,
+                    help="replan cadence of the timed --skew policy "
+                         "(the correctness leg always replans every "
+                         "step)")
+    ap.add_argument("--min-skew-ratio", type=float, default=0.85,
+                    help="required dynamic/static tokens/s ratio in "
+                         "--skew; placement is throughput-neutral on "
+                         "this runtime so the ratio centers at 1.0 — "
+                         "the floor carries per-run noise headroom for "
+                         "smoke-scale timed regions (the committed "
+                         "value must be >= 1.0)")
+    ap.add_argument("--min-makespan-ratio", type=float, default=1.0,
+                    help="required relayout-off/on makespan ratio in the "
+                         "--skew simulator leg (deterministic; dynamic "
+                         "relayout must never lose to a stale static "
+                         "layout under phase shifts)")
+    ap.add_argument("--sim-arch", default="deepseek-v2-236b",
+                    help="config for the --skew simulator leg (the "
+                         "flagship offloading-regime workload, where "
+                         "migration cost fits the overlap window)")
+    ap.add_argument("--sim-tokens", type=int, default=512,
+                    help="aggregated tokens/step for the simulator trace")
+    ap.add_argument("--sim-steps", type=int, default=24)
+    ap.add_argument("--sim-warmup", type=int, default=4)
     ap.add_argument("--prefix", action="store_true",
                     help="shared-system-prompt replay: gates prefix "
                          "hit-rate > 0, >= --min-speedup over no-reuse, "
@@ -825,6 +1180,8 @@ def main(argv=None):
         return run_prefix(args)
     if args.moe:
         return run_moe(args)
+    if args.skew:
+        return run_skew(args)
     return run_grid(args)
 
 

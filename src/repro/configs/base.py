@@ -9,7 +9,10 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field, replace
-from typing import Optional, Sequence
+from typing import TYPE_CHECKING, Optional, Sequence
+
+if TYPE_CHECKING:  # runtime import would cycle configs <-> core
+    from repro.core.policy import SchedulerPolicy
 
 
 @dataclass(frozen=True)
@@ -106,6 +109,11 @@ class ModelConfig:
     # batched expert GEMV (kernels/expert_gemv) for decode buffers;
     # ref = the inline grouped einsums.
     moe_backend: str = "auto"
+    # online tier-scheduling policy (core/policy.SchedulerPolicy); None =
+    # library defaults. Resolved by repro.core.policy.resolve_policy with
+    # the same precedence rule as the kernel-backend knobs above:
+    # explicit ServingLoop(scheduler=...) > cfg.scheduler > defaults.
+    scheduler: Optional["SchedulerPolicy"] = None
 
     # ------------------------------------------------------------------
     @property

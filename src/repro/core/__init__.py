@@ -5,7 +5,10 @@
 - scheduler:  bottleneck-aware greedy makespan scheduling (§4.2)
 - predictor:  EMA expert-load predictor (§4.3, Eq. 8)
 - relayout:   prediction-driven relayout & rebalancing (§4.3)
-- traces:     Fig.3-calibrated synthetic activation traces
+- traces:     Fig.3-calibrated synthetic activation traces, replayable
+              on-disk trace files (RoutingTrace / RequestTrace)
+- policy:     SchedulerPolicy — the unified online-scheduling knob
+              surface (resolve_policy, kernels/backend.py pattern)
 - simulator:  event-level system simulator + baseline policies (§5)
 """
 from repro.core.cost_model import (
@@ -18,18 +21,28 @@ from repro.core.cost_model import (
     ExpertShape,
     TPUDomains,
 )
+from repro.core.policy import SchedulerPolicy, resolve_policy
 from repro.core.predictor import EMALoadPredictor
 from repro.core.relayout import MigrationTask, RelayoutEngine
 from repro.core.scheduler import ExpertPlacement, MakespanScheduler, Schedule
 from repro.core.simulator import SimFlags, SimModel, SimResult, TriMoESimulator, simulate
 from repro.core.tiers import COLD, HOT, WARM, TierThresholds, classify, tier_stats
-from repro.core.traces import TraceSpec, generate_trace, trace_for_model
+from repro.core.traces import (
+    RequestTrace,
+    RoutingTrace,
+    TraceSpec,
+    generate_trace,
+    load_trace,
+    synth_request_trace,
+    trace_for_model,
+)
 
 __all__ = [
     "CPU", "GPU", "NDP", "STRIPED", "LOCALIZED", "HOT", "WARM", "COLD",
     "CostModel", "ExpertShape", "TPUDomains", "EMALoadPredictor",
     "MigrationTask", "RelayoutEngine", "ExpertPlacement", "MakespanScheduler",
-    "Schedule", "SimFlags", "SimModel", "SimResult", "TriMoESimulator",
-    "simulate", "TierThresholds", "classify", "tier_stats", "TraceSpec",
-    "generate_trace", "trace_for_model",
+    "Schedule", "SchedulerPolicy", "resolve_policy", "SimFlags", "SimModel",
+    "SimResult", "TriMoESimulator", "simulate", "TierThresholds", "classify",
+    "tier_stats", "TraceSpec", "RoutingTrace", "RequestTrace",
+    "generate_trace", "load_trace", "synth_request_trace", "trace_for_model",
 ]

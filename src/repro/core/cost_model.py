@@ -152,11 +152,15 @@ class TPUDomains:
         # MXU is a 128x128 systolic array: token counts below 128 underfill it
         return _util_ramp(np.asarray(tokens, np.float64), 128.0, 0.85)
 
-    def t_replicated(self, shape: ExpertShape, tokens) -> float:
+    # Vectorized forms (array loads in -> array seconds out): the online
+    # planner evaluates every expert's cost in all three domains each
+    # replan, and a per-expert Python loop over the scalar methods is
+    # measurable against smoke-scale decode steps.
+    def v_replicated(self, shape: ExpertShape, tokens) -> np.ndarray:
         u = self._mxu_util(tokens)
-        return float(shape.flops(tokens) / (self.hw.flops * u))
+        return shape.flops(tokens) / (self.hw.flops * u)
 
-    def t_striped(self, shape: ExpertShape, tokens) -> float:
+    def v_striped(self, shape: ExpertShape, tokens) -> np.ndarray:
         n = self.model_axis
         u = self._mxu_util(tokens)
         compute = shape.flops(tokens) / n / (self.hw.flops * u)
@@ -164,13 +168,22 @@ class TPUDomains:
         comm = (
             np.asarray(tokens, np.float64) * shape.d_model * 2 * (n - 1) / n
         ) / (self.hw.ici_link_bw * self.hw.ici_links)
-        return float(max(compute, comm))
+        return np.maximum(compute, comm)
 
-    def t_localized(self, shape: ExpertShape, tokens) -> float:
+    def v_localized(self, shape: ExpertShape, tokens) -> np.ndarray:
         u = self._mxu_util(tokens)
         compute = shape.flops(tokens) / (self.hw.flops * u)
         weight_read = shape.weight_bytes / self.hw.hbm_bw
         token_move = (
             2 * np.asarray(tokens, np.float64) * shape.d_model * 2
         ) / (self.hw.ici_link_bw * self.hw.ici_links)
-        return float(max(compute, weight_read) + token_move)
+        return np.maximum(compute, weight_read) + token_move
+
+    def t_replicated(self, shape: ExpertShape, tokens) -> float:
+        return float(self.v_replicated(shape, tokens))
+
+    def t_striped(self, shape: ExpertShape, tokens) -> float:
+        return float(self.v_striped(shape, tokens))
+
+    def t_localized(self, shape: ExpertShape, tokens) -> float:
+        return float(self.v_localized(shape, tokens))

@@ -14,6 +14,7 @@ from repro.serving.kv_cache import (
     scatter_slots,
 )
 from repro.serving.loop import LoopStats, ServingLoop
+from repro.serving.replay import ReplayResult, replay_requests, requests_from_trace
 from repro.serving.paged_kv import (
     PagedKVCache,
     RadixPrefixIndex,
@@ -35,4 +36,5 @@ __all__ = [
     "scatter_slots", "LoopStats", "ServingLoop", "TierSizes",
     "apply_migrations", "init_tiered_state", "tier_sizes", "tiered_moe_forward",
     "PagedKVCache", "RadixPrefixIndex", "init_paged_cache", "prefix_cacheable",
+    "ReplayResult", "replay_requests", "requests_from_trace",
 ]

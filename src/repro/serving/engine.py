@@ -3,17 +3,30 @@
 Per decode step:
   1. jitted `decode_step(..., tiered=...)` executes attention + the
      three-tier MoE and returns per-expert token counts;
-  2. the host updates the EMA predictor (Eq. 8) with the realized loads;
+  2. the host updates the EMA predictor (Eq. 8) with the realized loads
+     (`observe`);
   3. hysteresis tier decisions are diffed against the current placement,
-     candidate migrations are ranked by TPU-domain cost benefit
-     (core.cost_model.TPUDomains) and budgeted into a fixed-size plan;
+     candidate migrations are ranked bottleneck-first (moves draining
+     the most expensive tier ahead of equal-benefit moves elsewhere —
+     §4.2's refinement) by TPU-domain cost benefit
+     (core.cost_model.TPUDomains), and the plan is SIZED by the cost
+     model: moves are admitted while amortized benefit beats the
+     weight-swap cost, clamped to the policy's [plan_min, plan_max]
+     (`plan_migrations`);
   4. jitted `apply_migrations` swaps expert weights across tier buffers
-     (resharding collectives = DIMM-Link relayout), overlapping the next
-     step on real hardware via async dispatch.
+     (resharding collectives = DIMM-Link relayout) — `apply_planned` is
+     deferred by the serving loop until the *next* step has been
+     dispatched, so migration work overlaps the in-flight zigzag group
+     (the host-side analogue of double-buffered relayout).
+
+All scheduling knobs come from one `SchedulerPolicy`
+(core/policy.py), resolved by `resolve_policy` — the bare `plan_size=`
+/ `thresholds=` kwargs are deprecated but honored one release.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional
 
 import jax
@@ -22,6 +35,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.cost_model import ExpertShape, TPUDomains
+from repro.core.policy import SchedulerPolicy, resolve_policy
 from repro.core.predictor import EMALoadPredictor
 from repro.core.tiers import COLD, HOT, WARM, TierThresholds
 from repro.models.layers import Params
@@ -136,7 +150,10 @@ class EngineStats:
     prefills: int = 0
     prefill_tokens: int = 0
     migrations: int = 0
-    plans: int = 0
+    plans: int = 0  # layers that emitted at least one move
+    replans: int = 0  # plan_migrations passes over all layers
+    thrash_events: int = 0  # tier flip-flops within policy.thrash_window
+    plan_latency_s: List[float] = dataclasses.field(default_factory=list)
 
 
 class TriMoEServingEngine:
@@ -158,10 +175,11 @@ class TriMoEServingEngine:
         cache,
         tiered: Params,
         sizes: Optional[TierSizes] = None,
-        plan_size: int = 4,  # paper §5.5: up to four experts per window
-        thresholds: TierThresholds = TierThresholds(),
+        plan_size: Optional[int] = None,  # DEPRECATED -> policy.plan_size
+        thresholds: Optional[TierThresholds] = None,  # DEPRECATED -> policy
         cold_capacity_frac: float = 1.0,
         prefill_rows: int = 4,  # bucketed prefill batch width (row pad)
+        scheduler: Optional[SchedulerPolicy] = None,
     ):
         assert cfg.moe is not None, "TriMoE engine requires a routed-MoE arch"
         self.cfg = cfg
@@ -172,14 +190,25 @@ class TriMoEServingEngine:
         )
         self.tiered = tiered
         self.sizes = sizes or tier_sizes(cfg)
-        self.plan_size = plan_size
-        self.th = thresholds
+        self.policy = resolve_policy(
+            cfg, scheduler, plan_size=plan_size, thresholds=thresholds,
+            caller="TriMoEServingEngine",
+        )
+        self.th = self.policy.thresholds
         self.cold_capacity_frac = cold_capacity_frac
         n_moe = sum(cfg.uses_moe_layer(i) for i in range(cfg.n_layers))
-        self.predictor = EMALoadPredictor(n_moe, cfg.moe.n_experts, thresholds=thresholds)
+        self.predictor = EMALoadPredictor(
+            n_moe, cfg.moe.n_experts, alpha=self.policy.ema_alpha,
+            thresholds=self.th, hysteresis=self.policy.hysteresis,
+        )
         self.domains = TPUDomains()
         self.shape = ExpertShape(cfg.d_model, cfg.moe.d_expert)
         self.stats = EngineStats()
+        # thrash bookkeeping: (layer, expert) -> (replan idx, src tier)
+        # of its latest migration; returning to the tier it left within
+        # policy.thrash_window replans counts as a thrash event.
+        self._move_history: Dict[tuple, tuple] = {}
+        self._unapplied: Optional[list] = None
         # resolved kernel backends this engine's jitted closures capture
         # (kernels/backend.py; cfg.moe_backend / cfg.paged_attn_backend) —
         # observability for serving_bench's backend comparisons
@@ -248,7 +277,25 @@ class TriMoEServingEngine:
         self.decode_table_widths = set()  # distinct sliced widths (pow2)
         self.prefill_table_widths = set()  # paged prefill's sliced widths
         self._migrate = jax.jit(apply_migrations)
+
+        # stacked tier buffers migrate in ONE fused jit: extract group g,
+        # swap, write back — eager per-leaf a[g] / .at[g].set dispatches
+        # copy the whole stack per leaf and dominate replan cost at
+        # smoke scale. g is traced (weak scalar), so one compile serves
+        # every group.
+        def migrate_stack(stack_state, plan, g):
+            sub = jax.tree.map(lambda a: a[g], stack_state)
+            new = apply_migrations(sub, plan)
+            return jax.tree.map(lambda a, n: a.at[g].set(n), stack_state, new)
+
+        self._migrate_stack = jax.jit(migrate_stack)
         self._layer_keys = self._flatten_layer_keys()
+        # persistent host mirror of each layer's (expert_tier, expert_slot),
+        # lazily seeded from device state: planning then never needs a
+        # device->host sync. plan_migrations mutates it in lockstep with
+        # the swaps it emits (the apply-before-next-plan assertion keeps
+        # mirror and device from diverging).
+        self._host_layout: Dict[int, tuple] = {}
 
     # cache is owned by the SlotKVCache so the loop and engine share one
     # source of truth; keep attribute-style access for legacy callers.
@@ -495,31 +542,136 @@ class TriMoEServingEngine:
             return len(self._prefill_shapes)
 
     # ---------------------------------------------------------- migration
-    def replan(self, counts: np.ndarray) -> None:
-        """Update predictor, emit migration plans per MoE layer."""
-        for li, key in enumerate(self._layer_keys):
+    def _tier_cost(self, tier: int, load: float) -> float:
+        """Per-step execution time of one expert in a tier under the TPU
+        domain cost model (core.cost_model.TPUDomains)."""
+        load = max(float(load), 1.0)
+        if tier == HOT:
+            return self.domains.t_replicated(self.shape, load)
+        if tier == WARM:
+            return self.domains.t_striped(self.shape, load)
+        return self.domains.t_localized(self.shape, load)
+
+    def _tier_costs(self, loads: np.ndarray) -> np.ndarray:
+        """Vectorized `_tier_cost`: [3, *loads.shape] seconds for every
+        expert in every tier (loads clamped to >= 1 token, like the
+        scalar). Accepts one layer's [E] loads or the whole [L, E] EMA."""
+        loads = np.maximum(np.asarray(loads, np.float64), 1.0)
+        costs = np.empty((3,) + loads.shape)
+        costs[HOT] = self.domains.v_replicated(self.shape, loads)
+        costs[WARM] = self.domains.v_striped(self.shape, loads)
+        costs[COLD] = self.domains.v_localized(self.shape, loads)
+        return costs
+
+    @property
+    def swap_cost_s(self) -> float:
+        """Cost of one expert migration: both experts' weight stacks
+        cross the resharding collective (the DIMM-Link relayout
+        analogue) — the breakeven bar dynamic plan sizing charges each
+        candidate move against."""
+        hw = self.domains.hw
+        return 2.0 * self.shape.weight_bytes / (hw.ici_link_bw * hw.ici_links)
+
+    def observe(self, counts: np.ndarray) -> None:
+        """Feed realized per-layer expert loads to the EMA predictor
+        (Eq. 8). Runs every step, even under `policy.freeze` — the
+        static baseline still reports predictor accuracy."""
+        counts = np.asarray(counts)
+        for li in range(len(self._layer_keys)):
             self.predictor.update(li, counts[li])
-            decided = self.predictor.decide_tiers(li)
-            state = self._get_state(key)
-            cur_tier = np.array(state["expert_tier"], copy=True)
-            cur_slot = np.array(state["expert_slot"], copy=True)
+
+    def plan_migrations(self) -> list:
+        """Draw migration plans from the predictor's hysteresis tier
+        decisions WITHOUT applying them.
+
+        Returns [(layer_key, plan_array)] — hand the list to
+        `apply_planned` (the serving loop defers that until the next
+        decode step is in flight, overlapping the swap collectives with
+        compute). Plan arrays always have `policy.plan_rows` rows
+        (no-op rows = -1), so the jitted `apply_migrations` compiles
+        once.
+
+        Sizing is cost-model-driven when `policy.plan_size` is None: a
+        move is admitted while its per-step benefit (TPU-domain cost
+        delta at the predicted load) amortized over
+        `policy.amortize_steps` exceeds `swap_cost_s`, clamped to
+        [plan_min, plan_max]. Moves draining the current bottleneck
+        tier are ranked first (§4.2 refinement). Flip-flops within
+        `policy.thrash_window` replans are counted as thrash events."""
+        assert self._unapplied is None, (
+            "plan_migrations called with unapplied plans pending; call "
+            "apply_planned first"
+        )
+        t0 = time.perf_counter()
+        policy = self.policy
+        self.stats.replans += 1
+        r_idx = self.stats.replans
+        plans: list = []
+        if policy.freeze:
+            self.stats.plan_latency_s.append(time.perf_counter() - t0)
+            return plans
+        swap_cost = self.swap_cost_s
+        # one vectorized cost evaluation for ALL layers (the planner
+        # runs on the decode hot path; per-layer numpy round trips were
+        # a measurable fraction of a smoke-scale step)
+        costs_all = (
+            self._tier_costs(self.predictor.ema)
+            if policy.cost_mode == "tpu" else None
+        )
+        e_idx = np.arange(self.predictor.ema.shape[1])
+        for li, key in enumerate(self._layer_keys):
+            decided = self.predictor.decided[li]
+            if li not in self._host_layout:
+                state = self._get_state(key)
+                self._host_layout[li] = (
+                    np.array(state["expert_tier"], copy=True),
+                    np.array(state["expert_slot"], copy=True),
+                )
+            cur_tier, cur_slot = self._host_layout[li]
             moves = np.nonzero(decided != cur_tier)[0]
             if len(moves) == 0:
                 continue
             ema = self.predictor.ema[li]
-            # rank by predicted benefit under the TPU domain cost model
-            def benefit(e):
-                load = max(float(ema[e]), 1.0)
-                costs = {
-                    HOT: self.domains.t_replicated(self.shape, load),
-                    WARM: self.domains.t_striped(self.shape, load),
-                    COLD: self.domains.t_localized(self.shape, load),
-                }
-                return costs[cur_tier[e]] - costs[decided[e]]
-
-            moves = sorted(moves, key=benefit, reverse=True)[: self.plan_size]
-            plan = np.full((self.plan_size, 5), -1, np.int32)
-            for r, e in enumerate(moves):
+            if policy.cost_mode == "tpu":
+                cur_cost = costs_all[cur_tier, li, e_idx]
+                delta = cur_cost - costs_all[decided, li, e_idx]
+                tier_time = np.bincount(
+                    cur_tier, weights=cur_cost, minlength=3
+                )
+            else:  # "loads": pure EMA-mass ranking, no breakeven gate
+                delta = ema.astype(np.float64)
+                tier_time = np.bincount(cur_tier, weights=ema, minlength=3)
+            if (
+                policy.plan_size is None
+                and policy.plan_min == 0
+                and policy.cost_mode == "tpu"
+                and not (delta[moves] * policy.amortize_steps > swap_cost).any()
+            ):
+                continue  # nothing clears breakeven; skip the ordering work
+            benefit = {int(e): float(delta[e]) for e in moves}
+            # bottleneck-aware ordering: moves that drain the most
+            # expensive tier first, then by predicted benefit
+            bottleneck = int(np.argmax(tier_time))
+            order = sorted(
+                (int(e) for e in moves),
+                key=lambda e: (0 if cur_tier[e] == bottleneck else 1, -benefit[e]),
+            )
+            if policy.plan_size is not None:
+                chosen = order[: policy.plan_size]
+            else:
+                chosen = [
+                    e for e in order
+                    if policy.cost_mode != "tpu"
+                    or benefit[e] * policy.amortize_steps > swap_cost
+                ][: policy.plan_max]
+                if len(chosen) < policy.plan_min:
+                    backfill = [e for e in order if e not in chosen]
+                    chosen += backfill[: policy.plan_min - len(chosen)]
+            if not chosen:
+                continue
+            plan = np.full((policy.plan_rows, 5), -1, np.int32)
+            emitted = 0
+            for e in chosen:
                 dst_tier = int(decided[e])
                 # victim: lowest-EMA expert currently in the target tier
                 in_dst = np.nonzero(cur_tier == dst_tier)[0]
@@ -528,19 +680,49 @@ class TriMoEServingEngine:
                 victim = in_dst[np.argmin(ema[in_dst])]
                 e_tier, e_slot = int(cur_tier[e]), int(cur_slot[e])
                 v_slot = int(cur_slot[victim])
-                plan[r] = (e, e_tier, e_slot, dst_tier, v_slot)
+                plan[emitted] = (e, e_tier, e_slot, dst_tier, v_slot)
+                emitted += 1
                 # maintain the host mirror (swap)
                 cur_tier[victim], cur_slot[victim] = e_tier, e_slot
                 cur_tier[e], cur_slot[e] = dst_tier, v_slot
                 self.stats.migrations += 1
-            new_state = self._migrate(self._get_state(key), jnp.asarray(plan))
+                prev = self._move_history.get((li, e))
+                if (
+                    prev is not None
+                    and prev[1] == dst_tier
+                    and r_idx - prev[0] <= policy.thrash_window
+                ):
+                    self.stats.thrash_events += 1
+                self._move_history[(li, e)] = (r_idx, e_tier)
+            if emitted == 0:
+                continue
+            plans.append((key, plan))
+            self.stats.plans += 1
+        if plans:
+            self._unapplied = plans
+        self.stats.plan_latency_s.append(time.perf_counter() - t0)
+        return plans
+
+    def apply_planned(self, plans: list) -> None:
+        """Dispatch the jitted weight swaps for plans from
+        `plan_migrations`. Fixed-shape plan arrays mean exactly one
+        compile of `apply_migrations` per tier-buffer structure."""
+        for key, plan in plans:
             kind, name, g = key
             if kind == "layer":
-                self.tiered[name] = new_state
-            else:
-                self.tiered["stack"][name] = jax.tree.map(
-                    lambda a, n: a.at[g].set(n), self.tiered["stack"][name], new_state
+                self.tiered[name] = self._migrate(
+                    self.tiered[name], jnp.asarray(plan)
                 )
-            self.stats.plans += 1
+            else:
+                self.tiered["stack"][name] = self._migrate_stack(
+                    self.tiered["stack"][name], jnp.asarray(plan), g
+                )
+        self._unapplied = None
+
+    def replan(self, counts: np.ndarray) -> None:
+        """Legacy synchronous path: observe + plan + apply in one call
+        (`engine.step` and pre-PR-7 callers)."""
+        self.observe(counts)
+        self.apply_planned(self.plan_migrations())
 
     _replan = replan  # legacy name

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.policy import SchedulerPolicy, resolve_policy
 from repro.core.tiers import TierThresholds
 from repro.models.layers import Params
 from repro.serving.batching import BucketTable, Request, ZigzagBatcher
@@ -67,10 +68,29 @@ class LoopStats:
     ttft_s: List[float] = dataclasses.field(default_factory=list)
     # inter-token latency: gap between a request's consecutive tokens
     itl_s: List[float] = dataclasses.field(default_factory=list)
+    # --- scheduler observability (SchedulerPolicy surface), exposed the
+    # same way as ttft_s/itl_s: raw samples + percentile properties
+    replans: int = 0  # plan_migrations passes drawn by this loop
+    migrations: int = 0  # expert moves those passes emitted
+    thrash_events: int = 0  # tier flip-flops within policy.thrash_window
+    plan_s: List[float] = dataclasses.field(default_factory=list)
+    predictor_accuracy: float = 0.0  # EMA tier-prediction accuracy so far
 
     @property
     def tokens_per_s(self) -> float:
         return self.generated_tokens / max(self.wall_s, 1e-9)
+
+    @property
+    def migrations_per_replan(self) -> float:
+        return self.migrations / max(self.replans, 1)
+
+    @property
+    def plan_p50_s(self) -> float:
+        return self._pct(self.plan_s, 50)
+
+    @property
+    def plan_p95_s(self) -> float:
+        return self._pct(self.plan_s, 95)
 
     @property
     def mean_utilization(self) -> float:
@@ -110,7 +130,13 @@ class LoopStats:
             f"ttft_p95={self.ttft_p95_s * 1e3:.0f}ms "
             f"itl_p95={self.itl_p95_s * 1e3:.0f}ms, "
             f"decode_steps={self.decode_steps} idle_steps={self.idle_steps} "
-            f"prefill_chunks={self.prefill_chunks}"
+            f"prefill_chunks={self.prefill_chunks}, "
+            f"replans={self.replans} "
+            f"migrations={self.migrations} "
+            f"({self.migrations_per_replan:.1f}/replan) "
+            f"thrash={self.thrash_events} "
+            f"plan_p95={self.plan_p95_s * 1e3:.1f}ms "
+            f"pred_acc={self.predictor_accuracy:.2f}"
         )
 
 
@@ -195,8 +221,8 @@ class ServingLoop:
         n_groups: int = 1,
         cache_len: int = 64,
         sizes: Optional[TierSizes] = None,
-        plan_size: int = 4,
-        thresholds: TierThresholds = TierThresholds(),
+        plan_size: Optional[int] = None,  # DEPRECATED -> scheduler=
+        thresholds: Optional[TierThresholds] = None,  # DEPRECATED -> scheduler=
         cold_capacity_frac: float = 1.0,
         rng_seed: int = 1,
         bucket_table: "BucketTable | None | str" = "auto",
@@ -210,6 +236,7 @@ class ServingLoop:
         moe_backend: Optional[str] = None,
         chunked_prefill: bool = True,
         prefill_chunk_tokens: Optional[int] = None,
+        scheduler: Optional[SchedulerPolicy] = None,
     ):
         assert cfg.moe is not None, "ServingLoop drives the TriMoE MoE path"
         assert kv_layout in ("paged", "slots"), kv_layout
@@ -217,6 +244,15 @@ class ServingLoop:
             cfg = dataclasses.replace(cfg, paged_attn_backend=paged_attn_backend)
         if moe_backend is not None:
             cfg = dataclasses.replace(cfg, moe_backend=moe_backend)
+        # one resolution rule for the scheduling knobs, mirroring the
+        # kernel-backend pattern: explicit scheduler= > cfg.scheduler >
+        # defaults; the bare plan_size=/thresholds= kwargs fold in with a
+        # DeprecationWarning (honored one release)
+        self.policy = resolve_policy(
+            cfg, scheduler, plan_size=plan_size, thresholds=thresholds,
+            caller="ServingLoop",
+        )
+        cfg = dataclasses.replace(cfg, scheduler=self.policy)
         self.cfg = cfg
         self.paged = kv_layout == "paged"
         from repro.serving.paged_kv import prefix_cacheable
@@ -253,9 +289,10 @@ class ServingLoop:
             max_admit_wait=max_admit_wait,
         )
         self.engine = TriMoEServingEngine(
-            cfg, params, self.kv, tiered, sizes=sizes, plan_size=plan_size,
-            thresholds=thresholds, cold_capacity_frac=cold_capacity_frac,
+            cfg, params, self.kv, tiered, sizes=sizes,
+            cold_capacity_frac=cold_capacity_frac,
             prefill_rows=prefill_rows or min(batch_size, 4),
+            scheduler=self.policy,
         )
         # budgeted suffix tokens per piggyback chunk call: the bound on
         # how long any single prefill call can stall decode. 32 balances
@@ -273,6 +310,8 @@ class ServingLoop:
         self._slot_req: Dict[int, Request] = {}  # paged: slot -> request
         self._prefill_tasks: List[_PrefillTask] = []  # FIFO piggyback queue
         self._pending_counts = None  # previous group's realized loads
+        self._planned: list = []  # plans drawn but not yet applied
+        self._steps_since_replan = 0  # policy.replan_every cadence
 
     # ------------------------------------------------------------ intake
     def submit(self, req: Request) -> None:
@@ -466,67 +505,116 @@ class ServingLoop:
         )
 
     def _flush_replan(self) -> None:
-        if self._pending_counts is not None:
-            self.engine.replan(np.asarray(self._pending_counts))
-            self._pending_counts = None
+        """The double-buffered relayout flush, called right after a step
+        (or idle rotation) is dispatched:
+
+          1. APPLY the plans drawn during the previous iteration — the
+             jitted weight swaps overlap the step that is now in flight
+             (host-side analogue of double-buffered relayout);
+          2. OBSERVE the previous group's realized loads into the EMA
+             predictor (every step);
+          3. every `policy.replan_every` observed steps, DRAW the next
+             plans — applied at the next flush, one iteration later.
+        """
+        eng = self.engine
+        if self._planned:
+            eng.apply_planned(self._planned)
+            self._planned = []
+        if self._pending_counts is None:
+            return
+        counts = np.asarray(self._pending_counts)
+        self._pending_counts = None
+        eng.observe(counts)
+        self._steps_since_replan += 1
+        if self._steps_since_replan < self.policy.replan_every:
+            return
+        self._steps_since_replan = 0
+        st, es = self.stats, eng.stats
+        thrash_before = es.thrash_events
+        self._planned = eng.plan_migrations()
+        st.replans += 1
+        st.migrations += sum(
+            int((plan[:, 0] >= 0).sum()) for _, plan in self._planned
+        )
+        st.thrash_events += es.thrash_events - thrash_before
+        st.plan_s.append(es.plan_latency_s[-1])
+        st.predictor_accuracy = eng.predictor.stats.accuracy
+
+    def step_once(self) -> None:
+        """One scheduling iteration: admit, one piggyback prefill chunk,
+        one zigzag-group decode step, then the replan flush. Public so a
+        trace replay driver (serving/replay.py) can interleave arrivals
+        at exact loop iterations; call `finish()` when done."""
+        self._admit()
+        # piggyback: one budgeted prefill chunk rides along with
+        # this iteration's decode step (chunked_prefill)
+        self._prefill_step()
+        gb = self.batcher.next_group()
+        self.stats.util_sum += self.batcher.utilization
+        self.stats.util_samples += 1
+        if gb is None:
+            # the active group is idle — use its step slot for any
+            # outstanding migration work instead
+            self.stats.idle_steps += 1
+            self._flush_replan()
+            return
+        _, idxs, toks, pos, live = gb
+        if self.paged:
+            for row, i in enumerate(idxs):
+                if live[row]:
+                    # on-demand block alloc at block boundaries,
+                    # copy-on-write if the tail block is shared
+                    self.kv.ensure_block(i, int(pos[row]))
+            logits, counts = self.engine.step_slots_paged(
+                toks, pos, idxs, self.kv.table_rows(idxs), live=live
+            )
+        else:
+            logits, counts = self.engine.step_slots(toks, pos, idxs, live=live)
+        # zigzag overlap: while this group's step runs on the device,
+        # the host applies + replans migrations from previous loads
+        self._flush_replan()
+        self._pending_counts = counts
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        live_idx = [i for i, alive in zip(idxs, live) if alive]
+        self.batcher.record(live_idx, nxt[live])
+        self.stats.decode_steps += 1
+        self.stats.generated_tokens += len(live_idx)
+        now = time.time()
+        for i in live_idx:
+            rid = self.batcher.slots[i].request.rid
+            prev = self._t_last_tok.get(rid)
+            if prev is not None:
+                self.stats.itl_s.append(now - prev)
+            self._t_last_tok[rid] = now
+
+    def finish(self) -> None:
+        """Settle all deferred scheduling work (observe + plan + apply)
+        and recycle the final wave of completions, leaving the loop
+        reusable for further submissions."""
+        self._flush_replan()
+        if self._planned:
+            self.engine.apply_planned(self._planned)
+            self._planned = []
+        # recycle (but don't admit) the final wave of completions so the
+        # loop can be reused for further submissions
+        self._free_slots(self.batcher.recycle())
+        self._drain_completed()
 
     def run(self, max_steps: Optional[int] = None) -> List[Request]:
         """Drive until every submitted request completes (or max_steps
         group rotations elapse). Returns the completed requests in
-        completion order; per-request tokens are in Request.generated."""
+        completion order; per-request tokens are in Request.generated.
+        wall_s ACCUMULATES across run() calls (reset stats between
+        timed passes, as serving_bench does)."""
         t_start = time.time()
         steps = 0
         while self._work_remaining():
             if max_steps is not None and steps >= max_steps:
                 break
             steps += 1
-            self._admit()
-            # piggyback: one budgeted prefill chunk rides along with
-            # this iteration's decode step (chunked_prefill)
-            self._prefill_step()
-            gb = self.batcher.next_group()
-            self.stats.util_sum += self.batcher.utilization
-            self.stats.util_samples += 1
-            if gb is None:
-                # the active group is idle — use its step slot for any
-                # outstanding migration work instead
-                self.stats.idle_steps += 1
-                self._flush_replan()
-                continue
-            _, idxs, toks, pos, live = gb
-            if self.paged:
-                for row, i in enumerate(idxs):
-                    if live[row]:
-                        # on-demand block alloc at block boundaries,
-                        # copy-on-write if the tail block is shared
-                        self.kv.ensure_block(i, int(pos[row]))
-                logits, counts = self.engine.step_slots_paged(
-                    toks, pos, idxs, self.kv.table_rows(idxs), live=live
-                )
-            else:
-                logits, counts = self.engine.step_slots(toks, pos, idxs, live=live)
-            # zigzag overlap: while this group's step runs on the device,
-            # the host replans migrations from the previous group's loads
-            self._flush_replan()
-            self._pending_counts = counts
-            nxt = np.asarray(jnp.argmax(logits, -1))
-            live_idx = [i for i, alive in zip(idxs, live) if alive]
-            self.batcher.record(live_idx, nxt[live])
-            self.stats.decode_steps += 1
-            self.stats.generated_tokens += len(live_idx)
-            now = time.time()
-            for i in live_idx:
-                rid = self.batcher.slots[i].request.rid
-                prev = self._t_last_tok.get(rid)
-                if prev is not None:
-                    self.stats.itl_s.append(now - prev)
-                self._t_last_tok[rid] = now
-        self._flush_replan()
-        # recycle (but don't admit) the final wave of completions so the
-        # loop can be reused for further submissions
-        self._free_slots(self.batcher.recycle())
-        self._drain_completed()
-        self.stats.wall_s = time.time() - t_start
+            self.step_once()
+        self.finish()
+        self.stats.wall_s += time.time() - t_start
         return self.completions
 
 

@@ -18,11 +18,12 @@ buffers with resharding collectives — the DIMM-Link relayout analogue.
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.hardware import TPU_V5E
 from repro.models.layers import Params, dense_init
 from repro.models.moe import expert_ffn, moe_backend, router_topk, shared_ffn
 
@@ -36,20 +37,55 @@ class TierSizes(NamedTuple):
     n_cold: int
 
 
-def tier_sizes(cfg, n_chips: int = 256, hbm_budget_frac: float = 0.15,
+def validate_tier_sizes(cfg, sizes: TierSizes) -> TierSizes:
+    """Reject impossible tier splits before any buffer is allocated.
+
+    The failure this guards: n_hot + n_warm > n_experts leaves a
+    negative cold tier, which used to surface only later as a bogus
+    buffer shape deep inside init/dispatch."""
+    n_hot, n_warm, n_cold = sizes
+    e = cfg.moe.n_experts
+    if n_hot < 1 or n_warm < 0 or n_cold < 0:
+        raise ValueError(
+            f"invalid tier sizes {tuple(sizes)}: need n_hot >= 1 and "
+            f"non-negative warm/cold"
+        )
+    if n_hot + n_warm > e:
+        raise ValueError(
+            f"impossible tier split: n_hot + n_warm = {n_hot + n_warm} "
+            f"exceeds n_experts = {e}"
+        )
+    if n_hot + n_warm + n_cold != e:
+        raise ValueError(
+            f"tier sizes {tuple(sizes)} sum to {n_hot + n_warm + n_cold}, "
+            f"expected n_experts = {e}"
+        )
+    return sizes
+
+
+def tier_sizes(cfg, n_chips: Optional[int] = None, hbm_budget_frac: float = 0.15,
                reclaimed_kv_bytes: int = 0) -> TierSizes:
     """Size the tiers so the replicated hot buffer fits its HBM budget and
     warm stays affordable when striped over the model axis; everything
     else is cold (localized). Mirrors the paper's HBM-capacity-driven hot
     set with the DIMM pool as the elastic tail.
 
+    `n_chips` is the mesh size the warm stripe and cold (localized)
+    shards spread over; None reads the actual device count from the
+    live JAX mesh instead of assuming a fictional pod. The hot tier is
+    replicated, so its HBM budget is per-chip and independent of
+    `n_chips` — sizing is mesh-stable, but the split is validated
+    against the real mesh (a warm stripe needs at least one chip).
+
     `reclaimed_kv_bytes` is HBM handed back by the KV layer (the paged
     cache's pool savings vs a contiguous per-slot reservation,
     serving/paged_kv.py) — it joins the hot budget directly, so prefix
     reuse translates into more HBM-resident hot experts (paper §3.1:
     the hot set is HBM-budget-driven)."""
-    from repro.hardware import TPU_V5E
-
+    if n_chips is None:
+        n_chips = jax.device_count()
+    if n_chips < 1:
+        raise ValueError(f"n_chips must be >= 1, got {n_chips}")
     mo = cfg.moe
     w_bytes = 3 * cfg.d_model * mo.d_expert * 2
     n_moe_layers = max(1, sum(cfg.uses_moe_layer(i) for i in range(cfg.n_layers)))
@@ -57,7 +93,7 @@ def tier_sizes(cfg, n_chips: int = 256, hbm_budget_frac: float = 0.15,
     n_hot = max(1, min(mo.n_experts // 4, int(budget / (w_bytes * n_moe_layers))))
     n_warm = max(1, min(mo.n_experts - n_hot - 1, int(round(0.30 * mo.n_experts))))
     n_cold = mo.n_experts - n_hot - n_warm
-    return TierSizes(n_hot, n_warm, n_cold)
+    return validate_tier_sizes(cfg, TierSizes(n_hot, n_warm, n_cold))
 
 
 def init_tiered_state(rng, cfg, sizes: TierSizes, pad_cold_to: int = 16) -> Params:
@@ -73,6 +109,7 @@ def init_tiered_state(rng, cfg, sizes: TierSizes, pad_cold_to: int = 16) -> Para
     d, f = cfg.d_model, mo.d_expert
     dt = jnp.dtype(cfg.param_dtype)
     e = mo.n_experts
+    validate_tier_sizes(cfg, TierSizes(*sizes))
     ks = jax.random.split(rng, 3)
 
     def buf(key, n):

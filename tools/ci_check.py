@@ -9,10 +9,10 @@ one pytest node id per line, '#' comments allowed). CI fails on:
     regress later),
   * --min-passed N given and fewer than N tests passed (full-tier runs),
   * tracked build/test artifacts in the git index — Python bytecode
-    (__pycache__ / *.pyc), junit XML (report.xml, *.junit.xml), and
+    (__pycache__ / *.pyc), junit XML (report.xml, *.junit.xml),
     bench scratch outputs (BENCH_serving_{mixed,nightly}.json; the
-    committed BENCH_serving.json BASELINE is exempt) must never be
-    committed (bytecode was once, by accident; .gitignore plus this
+    committed BENCH_serving.json BASELINE is exempt), and replayable
+    workload traces (*.trace.npz) must never be committed (bytecode was once, by accident; .gitignore plus this
     gate keeps all of them out).
 
 Baseline entries that still fail never block. Entries absent from the
@@ -48,15 +48,19 @@ import xml.etree.ElementTree as ET
 
 def _is_artifact(path: str) -> bool:
     """Build/test artifacts that must never sit in the git index:
-    bytecode, junit XML reports, and bench scratch outputs. The
-    committed BENCH_serving.json baseline is NOT an artifact — only the
-    *_mixed/*_nightly scratch files CI regenerates every run are."""
+    bytecode, junit XML reports, bench scratch outputs, and replayable
+    trace files (serving_bench --skew regenerates *.trace.npz from a
+    seeded spec every run). The committed BENCH_serving.json baseline
+    is NOT an artifact — only the *_mixed/*_nightly scratch files CI
+    regenerates every run are."""
     if "__pycache__" in path or path.endswith((".pyc", ".pyo")):
         return True
     name = path.rsplit("/", 1)[-1]
     if name == "report.xml" or name.endswith(".junit.xml"):
         return True
     if name.startswith("junit") and name.endswith(".xml"):
+        return True
+    if name.endswith(".trace.npz"):
         return True
     return name.startswith("BENCH_") and (
         name.endswith("_mixed.json") or name.endswith("_nightly.json")
