@@ -50,7 +50,12 @@ nightly; and a deterministic flagship-scale simulator leg
 after the trace's phase shifts (--min-makespan-ratio).
 
 Results merge into one JSON keyed by mode, so CI can run --mixed,
---prefix, and --moe into the same BENCH_serving.json artifact.
+--prefix, and --moe into the same BENCH_serving.json artifact. Every
+mode's serving metrics are read from the loop's
+`MetricsRegistry.snapshot()` (see `snap_serving`), not hand-rolled
+dicts — the committed BENCH numbers and live telemetry share one
+source; `--prom` additionally dumps the registry as Prometheus-style
+text.
 
   PYTHONPATH=src python benchmarks/serving_bench.py
   PYTHONPATH=src python benchmarks/serving_bench.py \
@@ -95,6 +100,51 @@ def write_json(path, mode, result) -> None:
         json.dump(data, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"[serving_bench] wrote {path} [{mode}]")
+
+
+# bench-JSON field -> (registry snapshot key, scale, round digits); the
+# digits slot is None for integer counters
+SNAP_FIELDS = {
+    "tokens_per_s": ("serving.tokens_per_s", 1.0, 1),
+    "mean_utilization": ("serving.mean_utilization", 1.0, 3),
+    "mean_latency_ms": ("serving.mean_latency_s", 1e3, 1),
+    "ttft_p50_ms": ("serving.ttft_s.p50", 1e3, 1),
+    "ttft_p95_ms": ("serving.ttft_s.p95", 1e3, 1),
+    "itl_p50_ms": ("serving.itl_s.p50", 1e3, 1),
+    "itl_p95_ms": ("serving.itl_s.p95", 1e3, 1),
+    "prefill_chunks": ("serving.prefill_chunks", 1.0, None),
+    "replans": ("serving.replans", 1.0, None),
+    "migrations": ("serving.migrations", 1.0, None),
+    "migrations_per_replan": ("serving.migrations_per_replan", 1.0, 2),
+    "thrash_events": ("serving.thrash_events", 1.0, None),
+    "plan_p95_ms": ("serving.plan_s.p95", 1e3, 2),
+    "predictor_accuracy": ("serving.predictor_accuracy", 1.0, 3),
+}
+
+
+def snap_serving(st, *fields):
+    """Bench-JSON metric values read from the stats facade's
+    `MetricsRegistry.snapshot()` — the committed BENCH artifact and the
+    live telemetry share one source, so gating and observability can
+    never drift. `fields` are SNAP_FIELDS names; values keep the
+    historical BENCH units/rounding (baseline gates stay comparable)."""
+    snap = st.snapshot()
+    out = {}
+    for f in fields:
+        key, scale, digits = SNAP_FIELDS[f]
+        v = float(snap[key]) * scale
+        out[f] = int(v) if digits is None else round(v, digits)
+    return out
+
+
+def write_prom(path, stats) -> None:
+    """Dump the mode's registry as Prometheus-style text (the same
+    snapshot the JSON derives from, in scrape format)."""
+    if not path:
+        return
+    with open(path, "w") as f:
+        f.write(stats.registry.prometheus_text())
+    print(f"[serving_bench] wrote {path}")
 
 
 class CompileCounter:
@@ -271,17 +321,12 @@ def run_mixed(args) -> int:
         "bucket_table": list(table.widths),
         "chunked_prefill": True,
         "prefill_chunk_tokens": loop.prefill_chunk_tokens,
-        "prefill_chunks": st.prefill_chunks,
-        "tokens_per_s": round(st.tokens_per_s, 1),
-        "mean_utilization": round(st.mean_utilization, 3),
-        "mean_latency_ms": round(st.mean_latency_s * 1e3, 1),
-        "ttft_p50_ms": round(st.ttft_p50_s * 1e3, 1),
-        "ttft_p95_ms": round(st.ttft_p95_s * 1e3, 1),
-        "itl_p50_ms": round(st.itl_p50_s * 1e3, 1),
-        "itl_p95_ms": round(st.itl_p95_s * 1e3, 1),
-        "nochunk_tokens_per_s": round(st_n.tokens_per_s, 1),
-        "nochunk_ttft_p95_ms": round(st_n.ttft_p95_s * 1e3, 1),
-        "nochunk_itl_p95_ms": round(st_n.itl_p95_s * 1e3, 1),
+        **snap_serving(st, "prefill_chunks", "tokens_per_s",
+                       "mean_utilization", "mean_latency_ms",
+                       "ttft_p50_ms", "ttft_p95_ms", "itl_p50_ms",
+                       "itl_p95_ms"),
+        **{f"nochunk_{k}": v for k, v in snap_serving(
+            st_n, "tokens_per_s", "ttft_p95_ms", "itl_p95_ms").items()},
         "prefill_compiles": compiles,
         "prefill_compile_bound": bound,
         "prefill_table_widths": sorted(loop.engine.prefill_table_widths),
@@ -294,6 +339,7 @@ def run_mixed(args) -> int:
     )
     if args.json:
         write_json(args.json, "mixed", result)
+    write_prom(args.prom, st)
 
     rc = 0
     if done_c != n_total or done_n != n_total:
@@ -484,8 +530,9 @@ def run_prefix(args) -> int:
         "block_size": kv.block_size,
         "pool_blocks": kv.n_blocks,
         "bucket_table": list(table.widths),
-        "tokens_per_s": round(reuse.stats.tokens_per_s, 1),
-        "tokens_per_s_no_reuse": round(noreuse.stats.tokens_per_s, 1),
+        **snap_serving(reuse.stats, "tokens_per_s"),
+        "tokens_per_s_no_reuse": snap_serving(
+            noreuse.stats, "tokens_per_s")["tokens_per_s"],
         "speedup": round(speedup, 2),
         "prefix_hit_rate": round(kv.stats.hit_rate, 3),
         "hit_tokens": kv.stats.hit_tokens,
@@ -510,6 +557,7 @@ def run_prefix(args) -> int:
     )
     if args.json:
         write_json(args.json, "prefix", result)
+    write_prom(args.prom, reuse.stats)
 
     rc = 0
     if done_r != n_requests or done_n != n_requests:
@@ -645,8 +693,10 @@ def run_moe(args) -> int:
         "groups": args.moe_groups,
         "dtype": "float32",
         "pallas_resolved": list(loop_pal.engine.moe_backend),
-        "tokens_per_s_ref": round(st_ref.tokens_per_s, 1),
-        "tokens_per_s_pallas": round(st_pal.tokens_per_s, 1),
+        "tokens_per_s_ref": snap_serving(
+            st_ref, "tokens_per_s")["tokens_per_s"],
+        "tokens_per_s_pallas": snap_serving(
+            st_pal, "tokens_per_s")["tokens_per_s"],
         "speedup": round(speedup, 3),
         "tokens_identical": identical,
         "backend_compiles": cc.count,
@@ -658,6 +708,7 @@ def run_moe(args) -> int:
     )
     if args.json:
         write_json(args.json, "moe", result)
+    write_prom(args.prom, st_pal)
 
     rc = 0
     if done_ref != n_requests or done_pal != n_requests:
@@ -900,17 +951,16 @@ def run_skew(args) -> int:
         "tau_hot": args.skew_tau_hot,
         "tau_cold": args.skew_tau_cold,
         "replan_every_timed": args.skew_replan_every,
-        "tokens_per_s_dynamic": round(st_lean.tokens_per_s, 1),
-        "tokens_per_s_static": round(st_fro.tokens_per_s, 1),
+        "tokens_per_s_dynamic": snap_serving(
+            st_lean, "tokens_per_s")["tokens_per_s"],
+        "tokens_per_s_static": snap_serving(
+            st_fro, "tokens_per_s")["tokens_per_s"],
         "speedup": round(ratio, 3),
         "tokens_identical": identical,
-        "replans": st_dyn.replans,
-        "migrations": st_dyn.migrations,
-        "migrations_per_replan": round(st_dyn.migrations_per_replan, 2),
-        "thrash_events": st_dyn.thrash_events,
+        **snap_serving(st_dyn, "replans", "migrations",
+                       "migrations_per_replan", "thrash_events",
+                       "plan_p95_ms", "predictor_accuracy"),
         "hysteresis_thrash": hysteresis_thrash,
-        "plan_p95_ms": round(st_dyn.plan_p95_s * 1e3, 2),
-        "predictor_accuracy": round(st_dyn.predictor_accuracy, 3),
         "sim_arch": sim_cfg.name,
         "sim_makespan_ratio": round(makespan_ratio, 3),
         "sim_migrations": sim_on.migrations_executed,
@@ -926,6 +976,7 @@ def run_skew(args) -> int:
     )
     if args.json:
         write_json(args.json, "skew", result)
+    write_prom(args.prom, st_dyn)
 
     rc = 0
     if not round_trip:
@@ -1032,7 +1083,8 @@ def run_grid(args) -> int:
                 requests=args.requests, prompt_len=args.prompt_len,
                 new_tokens=args.new_tokens, cache_len=cache_len,
             )
-            tps[(width, groups)] = stats.tokens_per_s
+            tps[(width, groups)] = snap_serving(
+                stats, "tokens_per_s")["tokens_per_s"]
             print(f"{width:>6} {groups:>7} {stats.tokens_per_s:>9.1f} "
                   f"{stats.mean_utilization:>6.2f} "
                   f"{stats.mean_latency_s * 1e3:>8.0f} "
@@ -1046,10 +1098,12 @@ def run_grid(args) -> int:
             "prompt_len": args.prompt_len,
             "new_tokens": args.new_tokens,
             "tokens_per_s": {
-                f"w{w}g{g}": round(v, 1) for (w, g), v in tps.items()
+                f"w{w}g{g}": v for (w, g), v in tps.items()
             },
         }
         write_json(args.json, "grid", result)
+    if tps:
+        write_prom(args.prom, stats)
 
     if (1, 1) in tps and (8, 1) in tps:
         speedup = tps[(8, 1)] / tps[(1, 1)]
@@ -1071,6 +1125,10 @@ def main(argv=None):
     ap.add_argument("--json", default=None,
                     help="write results to this JSON file (BENCH_serving.json "
                          "in CI, uploaded as an artifact)")
+    ap.add_argument("--prom", default=None,
+                    help="also dump the mode's MetricsRegistry as "
+                         "Prometheus-style text to this path (the same "
+                         "registry the JSON metrics derive from)")
     ap.add_argument("--mixed", action="store_true",
                     help="mixed-length trace mode: >=6 distinct prompt "
                          "lengths; fails if distinct prefill compiles exceed "

@@ -13,6 +13,7 @@ from typing import TYPE_CHECKING, Optional, Sequence
 
 if TYPE_CHECKING:  # runtime import would cycle configs <-> core
     from repro.core.policy import SchedulerPolicy
+    from repro.obs import ObsConfig
 
 
 @dataclass(frozen=True)
@@ -114,6 +115,12 @@ class ModelConfig:
     # the same precedence rule as the kernel-backend knobs above:
     # explicit ServingLoop(scheduler=...) > cfg.scheduler > defaults.
     scheduler: Optional["SchedulerPolicy"] = None
+    # observability knobs (repro.obs.ObsConfig); None = metrics on,
+    # tracing off. Resolved by repro.obs.resolve_obs with the same
+    # precedence rule: explicit ServingLoop(obs=...) > cfg.obs >
+    # defaults (pass a live repro.obs.Observability via the kwarg to
+    # share one registry/tracer across components).
+    obs: Optional["ObsConfig"] = None
 
     # ------------------------------------------------------------------
     @property

@@ -12,19 +12,41 @@ Accuracy metric = fraction of (layer, expert) cells whose *predicted tier*
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from typing import Optional
 
 import numpy as np
 
 from repro.core.tiers import COLD, HOT, WARM, TierThresholds, classify
+from repro.obs.metrics import MetricsRegistry, RegistryStats
 
 
-@dataclass
-class PredictorStats:
-    decisions: int = 0
-    correct: int = 0
-    migrations: int = 0  # cells where the predicted tier changed
-    migrations_correct: int = 0
+class PredictorStats(RegistryStats):
+    """Registry-backed prediction accuracy counters (repro.obs) under
+    the `predictor.*` prefix; field access is source-compatible with the
+    old dataclass. Pass the serving stack's shared registry to land
+    these on the same snapshot as the loop/engine metrics."""
+
+    PREFIX = "predictor"
+    COUNTERS = {
+        "decisions": ("cells", "(layer, expert) tier predictions scored"),
+        "correct": ("cells", "predictions matching the realized tier"),
+        "migrations": ("cells", "cells where the predicted tier changed"),
+        "migrations_correct": (
+            "cells", "tier transitions matching the realized tier"),
+    }
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        super().__init__(registry)
+        self.registry.derived(
+            "predictor.accuracy", lambda: self.accuracy,
+            desc="tier-prediction accuracy over all cells",
+            source="PredictorStats",
+        )
+        self.registry.derived(
+            "predictor.migration_accuracy", lambda: self.migration_accuracy,
+            desc="accuracy restricted to predicted tier transitions",
+            source="PredictorStats",
+        )
 
     @property
     def accuracy(self) -> float:
@@ -46,6 +68,7 @@ class EMALoadPredictor:
         alpha: float = 0.3,
         thresholds: TierThresholds = TierThresholds(),
         hysteresis: float = 0.15,
+        registry: Optional[MetricsRegistry] = None,
     ):
         self.alpha = alpha
         self.th = thresholds
@@ -54,7 +77,7 @@ class EMALoadPredictor:
         self._primed = np.zeros(n_layers, dtype=bool)
         self._prev_real = np.zeros((n_layers, n_experts), dtype=np.int8)
         self.decided = np.full((n_layers, n_experts), WARM, dtype=np.int8)
-        self.stats = PredictorStats()
+        self.stats = PredictorStats(registry)
 
     @property
     def metadata_bytes(self) -> int:

@@ -26,6 +26,12 @@ Kernel-op wrappers (`moe_gemm.ops`, `expert_gemv.ops`,
 `flash_attention.ops`) accept `backend=` and route legacy
 `interpret=`/`use_ref=` kwargs through `resolve_op_backend`, which
 honors them for one release behind a DeprecationWarning.
+
+Observability: `set_kernel_tracer` installs a process-global
+`repro.obs.Tracer`; op wrappers bracket their resolved bodies with
+`kernel_span`, annotating the serving timeline with which backend each
+kernel family resolved to. See `kernel_span` for the jit staging-time
+semantics.
 """
 from __future__ import annotations
 
@@ -34,7 +40,13 @@ from typing import NamedTuple, Optional
 
 import jax
 
-__all__ = ["KernelBackend", "resolve_backend", "resolve_op_backend"]
+__all__ = [
+    "KernelBackend",
+    "kernel_span",
+    "resolve_backend",
+    "resolve_op_backend",
+    "set_kernel_tracer",
+]
 
 
 class KernelBackend(NamedTuple):
@@ -90,3 +102,51 @@ def resolve_op_backend(
                 return KernelBackend("ref", False)
             return KernelBackend("pallas", bool(interpret))
     return resolve_backend(backend if backend is not None else "auto", knob="backend")
+
+
+# --------------------------------------------------------------- tracing
+# Process-global kernel tracer (like jax.monitoring: one sink). Installed
+# by repro.obs.resolve_obs whenever a stack resolves with tracing enabled
+# — the LAST enabled stack wins, which is the right answer for the
+# one-loop-per-process serving deployments this instrument targets.
+_KERNEL_TRACER = None
+
+
+class _NullSpan:
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+def set_kernel_tracer(tracer) -> None:
+    """Install (or clear, with None) the process-global tracer that
+    `kernel_span` emits to."""
+    global _KERNEL_TRACER
+    _KERNEL_TRACER = tracer
+
+
+def kernel_span(op: str, backend: KernelBackend):
+    """Span around one resolved kernel invocation at the op-wrapper
+    level — records `kernel.<op>` with the resolved (kind, interpret)
+    pair on the installed tracer.
+
+    Staging-time semantics: the op wrappers are `jax.jit`-decorated, so
+    their Python bodies (and therefore this span) run when a new shape
+    TRACES/compiles, not on every device dispatch. On the timeline these
+    spans mark compile events and pin down which backend each kernel
+    family resolved to; steady-state per-step timing is carried by the
+    host-side engine/loop spans, which bracket the dispatched calls."""
+    tr = _KERNEL_TRACER
+    if tr is None or not tr.enabled:
+        return _NULL_SPAN
+    return tr.span(
+        f"kernel.{op}", cat="kernel",
+        backend=backend.kind, interpret=bool(backend.interpret),
+    )

@@ -12,7 +12,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.backend import resolve_op_backend
+from repro.kernels.backend import KernelBackend, kernel_span, resolve_op_backend
 from repro.kernels.expert_gemv.expert_gemv import expert_ffn_gemv
 from repro.kernels.expert_gemv.ref import expert_ffn_ref
 
@@ -40,14 +40,15 @@ def cold_expert_ffn(
     kind, interp = resolve_op_backend(
         backend, interpret=interpret, use_ref=use_ref, op="cold_expert_ffn"
     )
-    if kind == "ref":
-        return jax.vmap(expert_ffn_ref)(x, w1, w3, w2)
-    f = w1.shape[-1]
-    bf_eff = min(bf, f)
-    if f % bf_eff:
-        f_pad = (f + bf_eff - 1) // bf_eff * bf_eff
-        w1 = jnp.pad(w1, ((0, 0), (0, 0), (0, f_pad - f)))
-        w3 = jnp.pad(w3, ((0, 0), (0, 0), (0, f_pad - f)))
-        w2 = jnp.pad(w2, ((0, 0), (0, f_pad - f), (0, 0)))
-    fn = functools.partial(expert_ffn_gemv, bf=bf, interpret=interp)
-    return jax.vmap(fn)(x, w1, w3, w2)
+    with kernel_span("cold_expert_ffn", KernelBackend(kind, interp)):
+        if kind == "ref":
+            return jax.vmap(expert_ffn_ref)(x, w1, w3, w2)
+        f = w1.shape[-1]
+        bf_eff = min(bf, f)
+        if f % bf_eff:
+            f_pad = (f + bf_eff - 1) // bf_eff * bf_eff
+            w1 = jnp.pad(w1, ((0, 0), (0, 0), (0, f_pad - f)))
+            w3 = jnp.pad(w3, ((0, 0), (0, 0), (0, f_pad - f)))
+            w2 = jnp.pad(w2, ((0, 0), (0, f_pad - f), (0, 0)))
+        fn = functools.partial(expert_ffn_gemv, bf=bf, interpret=interp)
+        return jax.vmap(fn)(x, w1, w3, w2)

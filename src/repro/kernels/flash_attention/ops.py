@@ -12,7 +12,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.backend import resolve_op_backend
+from repro.kernels.backend import KernelBackend, kernel_span, resolve_op_backend
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 
@@ -40,14 +40,15 @@ def mha(
     qt = q.transpose(0, 2, 1, 3).reshape(b * h, sq, dh)
     kt = k.transpose(0, 2, 1, 3).reshape(b * h, -1, dh)
     vt = v.transpose(0, 2, 1, 3).reshape(b * h, -1, dh)
-    if kind == "ref":
-        o = attention_ref(
-            qt.reshape(b, h, sq, dh),
-            kt.reshape(b, h, -1, dh),
-            vt.reshape(b, h, -1, dh),
-            causal=causal,
-        ).reshape(b * h, sq, dh)
-    else:
-        o = flash_attention(qt, kt, vt, causal=causal, bq=bq, bk=bk,
-                            interpret=interp)
+    with kernel_span("mha", KernelBackend(kind, interp)):
+        if kind == "ref":
+            o = attention_ref(
+                qt.reshape(b, h, sq, dh),
+                kt.reshape(b, h, -1, dh),
+                vt.reshape(b, h, -1, dh),
+                causal=causal,
+            ).reshape(b * h, sq, dh)
+        else:
+            o = flash_attention(qt, kt, vt, causal=causal, bq=bq, bk=bk,
+                                interpret=interp)
     return o.reshape(b, h, sq, dh).transpose(0, 2, 1, 3)

@@ -22,7 +22,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.backend import resolve_op_backend
+from repro.kernels.backend import KernelBackend, kernel_span, resolve_op_backend
 from repro.kernels.moe_gemm.moe_gemm import moe_gemm
 from repro.kernels.moe_gemm.ref import grouped_ffn_ref, moe_gemm_ref
 
@@ -59,29 +59,30 @@ def grouped_expert_matmul(
     se = expert_of[order]
     group_sizes = jnp.zeros((e,), jnp.int32).at[se].add(1)
 
-    if kind == "ref":
-        ys = moe_gemm_ref(xs, w, group_sizes)
-    else:
-        # pad each group to a multiple of bm: compute destination rows
-        padded_sizes = (group_sizes + bm - 1) // bm * bm
-        starts = jnp.concatenate(
-            [jnp.zeros((1,), jnp.int32), jnp.cumsum(padded_sizes)[:-1]]
-        )
-        rank = jnp.arange(t, dtype=jnp.int32) - jnp.searchsorted(
-            se, se, side="left"
-        ).astype(jnp.int32)
-        dest = starts[se] + rank
-        t_pad = _round_up(capacity, bm)
-        xp = jnp.zeros((t_pad, d), x.dtype).at[dest].set(xs, mode="drop")
-        # tile -> expert map
-        n_tiles = t_pad // bm
-        tile_start = jnp.arange(n_tiles, dtype=jnp.int32) * bm
-        ends = jnp.cumsum(padded_sizes)
-        tile_expert = jnp.clip(
-            jnp.searchsorted(ends, tile_start, side="right"), 0, e - 1
-        ).astype(jnp.int32)
-        yp = moe_gemm(xp, w, tile_expert, bm=bm, bn=bn, interpret=interp)
-        ys = yp[dest]
+    with kernel_span("grouped_expert_matmul", KernelBackend(kind, interp)):
+        if kind == "ref":
+            ys = moe_gemm_ref(xs, w, group_sizes)
+        else:
+            # pad each group to a multiple of bm: compute destination rows
+            padded_sizes = (group_sizes + bm - 1) // bm * bm
+            starts = jnp.concatenate(
+                [jnp.zeros((1,), jnp.int32), jnp.cumsum(padded_sizes)[:-1]]
+            )
+            rank = jnp.arange(t, dtype=jnp.int32) - jnp.searchsorted(
+                se, se, side="left"
+            ).astype(jnp.int32)
+            dest = starts[se] + rank
+            t_pad = _round_up(capacity, bm)
+            xp = jnp.zeros((t_pad, d), x.dtype).at[dest].set(xs, mode="drop")
+            # tile -> expert map
+            n_tiles = t_pad // bm
+            tile_start = jnp.arange(n_tiles, dtype=jnp.int32) * bm
+            ends = jnp.cumsum(padded_sizes)
+            tile_expert = jnp.clip(
+                jnp.searchsorted(ends, tile_start, side="right"), 0, e - 1
+            ).astype(jnp.int32)
+            yp = moe_gemm(xp, w, tile_expert, bm=bm, bn=bn, interpret=interp)
+            ys = yp[dest]
 
     # unsort back to input order
     inv = jnp.zeros_like(order).at[order].set(jnp.arange(t))
@@ -119,35 +120,41 @@ def grouped_expert_ffn(
     kind, interp = resolve_op_backend(
         backend, interpret=interpret, use_ref=use_ref, op="grouped_expert_ffn"
     )
+    span = kernel_span("grouped_expert_ffn", KernelBackend(kind, interp))
     if kind == "ref":
-        return grouped_ffn_ref(h, w_gate, w_up, w_down, group_expert)
+        with span:
+            return grouped_ffn_ref(h, w_gate, w_up, w_down, group_expert)
 
     g, c, d = h.shape
     e, _, f = w_gate.shape
     if group_expert is None:
         assert g == e, (g, e)
         group_expert = jnp.arange(e, dtype=jnp.int32)
-    c_pad = _round_up(c, bm)
-    f_pad = _round_up(f, bn)
-    d_pad = _round_up(d, bn)
+    with span:
+        c_pad = _round_up(c, bm)
+        f_pad = _round_up(f, bn)
+        d_pad = _round_up(d, bn)
 
-    hp = jnp.pad(h, ((0, 0), (0, c_pad - c), (0, 0))).reshape(g * c_pad, d)
-    tile_expert = jnp.repeat(
-        group_expert.astype(jnp.int32), c_pad // bm
-    )  # [G * c_pad // bm]
+        hp = jnp.pad(h, ((0, 0), (0, c_pad - c), (0, 0))).reshape(g * c_pad, d)
+        tile_expert = jnp.repeat(
+            group_expert.astype(jnp.int32), c_pad // bm
+        )  # [G * c_pad // bm]
 
-    # --- GEMM 1: x @ [w_gate | w_up] in one [D, 2*F_pad] panel ---
-    w_gu = jnp.concatenate(
-        [
-            jnp.pad(w_gate, ((0, 0), (0, 0), (0, f_pad - f))),
-            jnp.pad(w_up, ((0, 0), (0, 0), (0, f_pad - f))),
-        ],
-        axis=-1,
-    )
-    gu = moe_gemm(hp, w_gu, tile_expert, bm=bm, bn=bn, interpret=interp)
-    a = jax.nn.silu(gu[:, :f_pad].astype(jnp.float32)).astype(h.dtype) * gu[:, f_pad:]
+        # --- GEMM 1: x @ [w_gate | w_up] in one [D, 2*F_pad] panel ---
+        w_gu = jnp.concatenate(
+            [
+                jnp.pad(w_gate, ((0, 0), (0, 0), (0, f_pad - f))),
+                jnp.pad(w_up, ((0, 0), (0, 0), (0, f_pad - f))),
+            ],
+            axis=-1,
+        )
+        gu = moe_gemm(hp, w_gu, tile_expert, bm=bm, bn=bn, interpret=interp)
+        a = (
+            jax.nn.silu(gu[:, :f_pad].astype(jnp.float32)).astype(h.dtype)
+            * gu[:, f_pad:]
+        )
 
-    # --- GEMM 2: down projection ---
-    w_dn = jnp.pad(w_down, ((0, 0), (0, f_pad - f), (0, d_pad - d)))
-    o = moe_gemm(a, w_dn, tile_expert, bm=bm, bn=bn, interpret=interp)
-    return o[:, :d].reshape(g, c_pad, d)[:, :c]
+        # --- GEMM 2: down projection ---
+        w_dn = jnp.pad(w_down, ((0, 0), (0, f_pad - f), (0, d_pad - d)))
+        o = moe_gemm(a, w_dn, tile_expert, bm=bm, bn=bn, interpret=interp)
+        return o[:, :d].reshape(g, c_pad, d)[:, :c]

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.backend import KernelBackend, kernel_span
 from repro.models.layers import Params, apply_rope, dense_init
 
 NEG_INF = -1e30
@@ -417,19 +418,20 @@ def gqa_decode_paged(p: Params, cfg, x, pool_k, pool_v, tables, pos,
     pool_k = _paged_write(pool_k, tables, pos, k[:, 0])
     pool_v = _paged_write(pool_v, tables, pos, v[:, 0])
     kind, interpret = _paged_backend(cfg, backend)
-    if kind == "pallas":
-        from repro.kernels.paged_attention import paged_decode_gqa
+    with kernel_span("paged_decode_gqa", KernelBackend(kind, interpret)):
+        if kind == "pallas":
+            from repro.kernels.paged_attention import paged_decode_gqa
 
-        kvh = pool_k.shape[2]
-        qk = q[:, 0].reshape(b, kvh, q.shape[2] // kvh, q.shape[3])
-        out = paged_decode_gqa(
-            qk, pool_k, pool_v, tables, pos, interpret=interpret
-        ).reshape(b, 1, q.shape[2], q.shape[3])
-    else:
-        keys = paged_gather(pool_k, tables)  # [B, nb*bs, Kv, hd]
-        vals = paged_gather(pool_v, tables)
-        valid = jnp.arange(keys.shape[1])[None, :] <= posv
-        out = _grouped_attention(q, keys, vals, valid=valid)
+            kvh = pool_k.shape[2]
+            qk = q[:, 0].reshape(b, kvh, q.shape[2] // kvh, q.shape[3])
+            out = paged_decode_gqa(
+                qk, pool_k, pool_v, tables, pos, interpret=interpret
+            ).reshape(b, 1, q.shape[2], q.shape[3])
+        else:
+            keys = paged_gather(pool_k, tables)  # [B, nb*bs, Kv, hd]
+            vals = paged_gather(pool_v, tables)
+            valid = jnp.arange(keys.shape[1])[None, :] <= posv
+            out = _grouped_attention(q, keys, vals, valid=valid)
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), pool_k, pool_v
 
 
@@ -462,27 +464,28 @@ def mla_decode_paged(p: Params, cfg, x, pool_ckv, pool_krope, tables, pos,
                        preferred_element_type=jnp.float32)
     scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
     kind, interpret = _paged_backend(cfg, backend)
-    if kind == "pallas":
-        from repro.kernels.paged_attention import paged_decode_mla
+    with kernel_span("paged_decode_mla", KernelBackend(kind, interpret)):
+        if kind == "pallas":
+            from repro.kernels.paged_attention import paged_decode_mla
 
-        o_lat = paged_decode_mla(
-            q_lat[:, 0], q_rope[:, 0].astype(jnp.float32), pool_ckv,
-            pool_krope, tables, pos, scale=scale, interpret=interpret,
-        )[:, None]  # [B,1,H,r] fp32
-    else:
-        cache_ckv = paged_gather(pool_ckv, tables)  # [B, nb*bs, r]
-        cache_krope = paged_gather(pool_krope, tables)
-        s = (
-            jnp.einsum("bshr,btr->bhst", q_lat, cache_ckv,
-                       preferred_element_type=jnp.float32)
-            + jnp.einsum("bshk,btk->bhst", q_rope, cache_krope,
-                         preferred_element_type=jnp.float32)
-        ) * scale
-        valid = jnp.arange(cache_ckv.shape[1])[None, :] <= posv
-        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
-        pattn = jax.nn.softmax(s, axis=-1)
-        o_lat = jnp.einsum("bhst,btr->bshr", pattn, cache_ckv,
+            o_lat = paged_decode_mla(
+                q_lat[:, 0], q_rope[:, 0].astype(jnp.float32), pool_ckv,
+                pool_krope, tables, pos, scale=scale, interpret=interpret,
+            )[:, None]  # [B,1,H,r] fp32
+        else:
+            cache_ckv = paged_gather(pool_ckv, tables)  # [B, nb*bs, r]
+            cache_krope = paged_gather(pool_krope, tables)
+            s = (
+                jnp.einsum("bshr,btr->bhst", q_lat, cache_ckv,
                            preferred_element_type=jnp.float32)
+                + jnp.einsum("bshk,btk->bhst", q_rope, cache_krope,
+                             preferred_element_type=jnp.float32)
+            ) * scale
+            valid = jnp.arange(cache_ckv.shape[1])[None, :] <= posv
+            s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+            pattn = jax.nn.softmax(s, axis=-1)
+            o_lat = jnp.einsum("bhst,btr->bshr", pattn, cache_ckv,
+                               preferred_element_type=jnp.float32)
     o = jnp.einsum("bshr,rhk->bshk", o_lat, wv_b,
                    preferred_element_type=jnp.float32).astype(x.dtype)
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), pool_ckv, pool_krope
@@ -530,17 +533,18 @@ def gqa_prefill_paged(p: Params, cfg, x, pool_k, pool_v, tables, past_len,
     kvh = pool_k.shape[2]
     qk = q.reshape(b, c, kvh, q.shape[2] // kvh, q.shape[3])
     kind, interpret = _paged_backend(cfg, backend)
-    if kind == "pallas":
-        from repro.kernels.paged_attention import paged_prefill_gqa
+    with kernel_span("paged_prefill_gqa", KernelBackend(kind, interpret)):
+        if kind == "pallas":
+            from repro.kernels.paged_attention import paged_prefill_gqa
 
-        out = paged_prefill_gqa(
-            qk, pool_k, pool_v, tables, past_len, lengths,
-            interpret=interpret,
-        )
-    else:
-        from repro.kernels.paged_attention import paged_prefill_gqa_ref
+            out = paged_prefill_gqa(
+                qk, pool_k, pool_v, tables, past_len, lengths,
+                interpret=interpret,
+            )
+        else:
+            from repro.kernels.paged_attention import paged_prefill_gqa_ref
 
-        out = paged_prefill_gqa_ref(qk, pool_k, pool_v, tables, past_len)
+            out = paged_prefill_gqa_ref(qk, pool_k, pool_v, tables, past_len)
     out = out.reshape(b, c, q.shape[2], q.shape[3]).astype(x.dtype)
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), pool_k, pool_v
 
@@ -577,20 +581,21 @@ def mla_prefill_paged(p: Params, cfg, x, pool_ckv, pool_krope, tables,
                        preferred_element_type=jnp.float32)
     scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
     kind, interpret = _paged_backend(cfg, backend)
-    if kind == "pallas":
-        from repro.kernels.paged_attention import paged_prefill_mla
+    with kernel_span("paged_prefill_mla", KernelBackend(kind, interpret)):
+        if kind == "pallas":
+            from repro.kernels.paged_attention import paged_prefill_mla
 
-        o_lat = paged_prefill_mla(
-            q_lat, q_rope.astype(jnp.float32), pool_ckv, pool_krope,
-            tables, past_len, lengths, scale=scale, interpret=interpret,
-        )
-    else:
-        from repro.kernels.paged_attention import paged_prefill_mla_ref
+            o_lat = paged_prefill_mla(
+                q_lat, q_rope.astype(jnp.float32), pool_ckv, pool_krope,
+                tables, past_len, lengths, scale=scale, interpret=interpret,
+            )
+        else:
+            from repro.kernels.paged_attention import paged_prefill_mla_ref
 
-        o_lat = paged_prefill_mla_ref(
-            q_lat, q_rope.astype(jnp.float32), pool_ckv, pool_krope,
-            tables, past_len, scale=scale,
-        )
+            o_lat = paged_prefill_mla_ref(
+                q_lat, q_rope.astype(jnp.float32), pool_ckv, pool_krope,
+                tables, past_len, scale=scale,
+            )
     o = jnp.einsum("bshr,rhk->bshk", o_lat, wv_b,
                    preferred_element_type=jnp.float32).astype(x.dtype)
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), pool_ckv, pool_krope

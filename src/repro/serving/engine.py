@@ -25,7 +25,6 @@ All scheduling knobs come from one `SchedulerPolicy`
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Dict, List, Optional
 
@@ -47,12 +46,15 @@ from repro.models.model import (
     prefill_paged,
     stack_plan,
 )
+from repro.obs import resolve_obs
+from repro.obs.metrics import RegistryStats
 from repro.serving.kv_cache import SlotKVCache, gather_slots, scatter_slots
 from repro.serving.paged_kv import PagedKVCache
 from repro.serving.tiered_moe import (
     TierSizes,
     apply_migrations,
     init_tiered_state,
+    tier_occupancy,
     tier_sizes,
 )
 
@@ -144,16 +146,28 @@ def strip_expert_weights(params: Params, cfg: ModelConfig) -> Params:
     return out
 
 
-@dataclasses.dataclass
-class EngineStats:
-    steps: int = 0
-    prefills: int = 0
-    prefill_tokens: int = 0
-    migrations: int = 0
-    plans: int = 0  # layers that emitted at least one move
-    replans: int = 0  # plan_migrations passes over all layers
-    thrash_events: int = 0  # tier flip-flops within policy.thrash_window
-    plan_latency_s: List[float] = dataclasses.field(default_factory=list)
+class EngineStats(RegistryStats):
+    """Registry-backed engine counters (repro.obs) under the `engine.*`
+    prefix; field access (`stats.steps += 1`,
+    `stats.plan_latency_s.append(...)`) is source-compatible with the
+    old dataclass. The ServingLoop passes its shared registry so these
+    land on the same snapshot as the `serving.*` / `predictor.*`
+    metrics; a bare `EngineStats()` is standalone."""
+
+    PREFIX = "engine"
+    COUNTERS = {
+        "steps": ("steps", "decode steps dispatched"),
+        "prefills": ("rows", "prefill rows computed"),
+        "prefill_tokens": ("tokens", "real prompt tokens prefilled"),
+        "migrations": ("moves", "expert moves emitted by planning"),
+        "plans": ("plans", "layers that emitted at least one move"),
+        "replans": ("passes", "plan_migrations passes over all layers"),
+        "thrash_events": (
+            "events", "tier flip-flops within policy.thrash_window"),
+    }
+    HISTS = {
+        "plan_latency_s": ("s", "host-side plan_migrations latency"),
+    }
 
 
 class TriMoEServingEngine:
@@ -180,9 +194,16 @@ class TriMoEServingEngine:
         cold_capacity_frac: float = 1.0,
         prefill_rows: int = 4,  # bucketed prefill batch width (row pad)
         scheduler: Optional[SchedulerPolicy] = None,
+        obs=None,  # Observability | ObsConfig | None (repro.obs)
     ):
         assert cfg.moe is not None, "TriMoE engine requires a routed-MoE arch"
         self.cfg = cfg
+        # observability resolves like the scheduler/kernel knobs:
+        # explicit obs= > cfg.obs > defaults. The ServingLoop passes its
+        # own Observability so loop, engine, and predictor share one
+        # registry (one snapshot) and one trace timeline.
+        self.obs = resolve_obs(cfg, obs, caller="TriMoEServingEngine")
+        self._tr = self.obs.tracer
         self.params = strip_expert_weights(params, cfg)
         self.kv = (
             cache if isinstance(cache, (SlotKVCache, PagedKVCache))
@@ -200,10 +221,11 @@ class TriMoEServingEngine:
         self.predictor = EMALoadPredictor(
             n_moe, cfg.moe.n_experts, alpha=self.policy.ema_alpha,
             thresholds=self.th, hysteresis=self.policy.hysteresis,
+            registry=self.obs.registry,
         )
         self.domains = TPUDomains()
         self.shape = ExpertShape(cfg.d_model, cfg.moe.d_expert)
-        self.stats = EngineStats()
+        self.stats = EngineStats(self.obs.registry)
         # thrash bookkeeping: (layer, expert) -> (replan idx, src tier)
         # of its latest migration; returning to the tier it left within
         # policy.thrash_window replans counts as a thrash event.
@@ -606,6 +628,22 @@ class TriMoEServingEngine:
         policy = self.policy
         self.stats.replans += 1
         r_idx = self.stats.replans
+        if self._tr.enabled:
+            # tier timeline channel: one counter sample per replan of
+            # where experts sit (decided tiers) and where predicted load
+            # mass sits — the stacked Perfetto tracks relayout decisions
+            # are audited against
+            occ = tier_occupancy(self.predictor.decided, self.predictor.ema)
+            self._tr.counter(
+                "tier/experts",
+                {k: v for k, v in occ.items() if k.endswith("_experts")},
+                cat="tier",
+            )
+            self._tr.counter(
+                "tier/predicted_load",
+                {k: v for k, v in occ.items() if k.endswith("_load")},
+                cat="tier",
+            )
         plans: list = []
         if policy.freeze:
             self.stats.plan_latency_s.append(time.perf_counter() - t0)
@@ -693,6 +731,11 @@ class TriMoEServingEngine:
                     and r_idx - prev[0] <= policy.thrash_window
                 ):
                     self.stats.thrash_events += 1
+                    if self._tr.enabled:
+                        self._tr.instant(
+                            "thrash", cat="tier", layer=li, expert=int(e),
+                            back_to=dst_tier,
+                        )
                 self._move_history[(li, e)] = (r_idx, e_tier)
             if emitted == 0:
                 continue
@@ -707,16 +750,28 @@ class TriMoEServingEngine:
         """Dispatch the jitted weight swaps for plans from
         `plan_migrations`. Fixed-shape plan arrays mean exactly one
         compile of `apply_migrations` per tier-buffer structure."""
-        for key, plan in plans:
-            kind, name, g = key
-            if kind == "layer":
-                self.tiered[name] = self._migrate(
-                    self.tiered[name], jnp.asarray(plan)
-                )
-            else:
-                self.tiered["stack"][name] = self._migrate_stack(
-                    self.tiered["stack"][name], jnp.asarray(plan), g
-                )
+        if not plans:
+            self._unapplied = None
+            return
+        tr = self._tr
+        with tr.span("migrate", cat="scheduler"):
+            for key, plan in plans:
+                kind, name, g = key
+                if tr.enabled:
+                    # one instant per migrated layer on the tier channel
+                    tr.instant(
+                        "tier_migration", cat="tier",
+                        layer=f"{kind}:{name}:g{g}",
+                        moves=int((plan[:, 0] >= 0).sum()),
+                    )
+                if kind == "layer":
+                    self.tiered[name] = self._migrate(
+                        self.tiered[name], jnp.asarray(plan)
+                    )
+                else:
+                    self.tiered["stack"][name] = self._migrate_stack(
+                        self.tiered["stack"][name], jnp.asarray(plan), g
+                    )
         self._unapplied = None
 
     def replan(self, counts: np.ndarray) -> None:

@@ -41,6 +41,8 @@ from repro.configs.base import ModelConfig
 from repro.core.policy import SchedulerPolicy, resolve_policy
 from repro.core.tiers import TierThresholds
 from repro.models.layers import Params
+from repro.obs import resolve_obs
+from repro.obs.metrics import RegistryStats, pct
 from repro.serving.batching import BucketTable, Request, ZigzagBatcher
 from repro.serving.engine import (
     TriMoEServingEngine,
@@ -52,29 +54,66 @@ from repro.serving.paged_kv import PagedKVCache
 from repro.serving.tiered_moe import TierSizes, tier_sizes
 
 
-@dataclasses.dataclass
-class LoopStats:
-    admitted: int = 0
-    completed: int = 0
-    decode_steps: int = 0  # group steps that ran the engine
-    idle_steps: int = 0  # group rotations that found the group empty
-    prefill_chunks: int = 0  # budgeted piggyback chunk calls
-    generated_tokens: int = 0  # sampled tokens (prefill firsts + decode)
-    wall_s: float = 0.0
-    util_sum: float = 0.0
-    util_samples: int = 0
-    latencies_s: List[float] = dataclasses.field(default_factory=list)
-    # per-request time-to-first-token (submit -> first sampled token)
-    ttft_s: List[float] = dataclasses.field(default_factory=list)
-    # inter-token latency: gap between a request's consecutive tokens
-    itl_s: List[float] = dataclasses.field(default_factory=list)
-    # --- scheduler observability (SchedulerPolicy surface), exposed the
-    # same way as ttft_s/itl_s: raw samples + percentile properties
-    replans: int = 0  # plan_migrations passes drawn by this loop
-    migrations: int = 0  # expert moves those passes emitted
-    thrash_events: int = 0  # tier flip-flops within policy.thrash_window
-    plan_s: List[float] = dataclasses.field(default_factory=list)
-    predictor_accuracy: float = 0.0  # EMA tier-prediction accuracy so far
+class LoopStats(RegistryStats):
+    """Registry-backed serving-loop stats (repro.obs) under the
+    `serving.*` prefix. Field access (`stats.admitted += 1`,
+    `stats.ttft_s.append(...)`) is source-compatible with the old
+    dataclass; `snapshot()` returns the backing registry's one flat
+    dict (benchmarks derive their JSON from it).
+
+    Accumulate-vs-reset contract: every metric — including `wall_s` —
+    ACCUMULATES across `run()` calls on the same LoopStats. Call
+    `reset()` between timed passes (serving_bench does) to start a
+    fresh measurement window without detaching from the shared
+    registry; binding a fresh `LoopStats()` also works but leaves the
+    engine/predictor metrics on the loop's original registry.
+    """
+
+    PREFIX = "serving"
+    COUNTERS = {
+        "admitted": ("requests", "requests admitted into decode slots"),
+        "completed": ("requests", "requests fully generated"),
+        "decode_steps": ("steps", "group steps that ran the engine"),
+        "idle_steps": ("steps", "group rotations finding the group empty"),
+        "prefill_chunks": ("calls", "budgeted piggyback chunk calls"),
+        "generated_tokens": (
+            "tokens", "sampled tokens (prefill firsts + decode)"),
+        "util_samples": ("samples", "slot-utilization samples taken"),
+        # --- scheduler observability (SchedulerPolicy surface)
+        "replans": ("passes", "plan_migrations passes drawn by this loop"),
+        "migrations": ("moves", "expert moves those passes emitted"),
+        "thrash_events": (
+            "events", "tier flip-flops within policy.thrash_window"),
+    }
+    GAUGES = {
+        "wall_s": ("s", "accumulated run() wall time (see reset())"),
+        "util_sum": ("", "summed slot-utilization samples"),
+        "predictor_accuracy": ("", "EMA tier-prediction accuracy so far"),
+    }
+    HISTS = {
+        "latencies_s": ("s", "per-request admit -> complete latency"),
+        # per-request time-to-first-token (submit -> first sampled token)
+        "ttft_s": ("s", "time-to-first-token (submit -> first token)"),
+        # inter-token latency: gap between a request's consecutive tokens
+        "itl_s": ("s", "inter-token latency between consecutive tokens"),
+        "plan_s": ("s", "host-side migration-planning latency"),
+    }
+
+    def __init__(self, registry=None):
+        super().__init__(registry)
+        for name, fn, unit, desc in (
+            ("serving.tokens_per_s", lambda: self.tokens_per_s, "tok/s",
+             "generated_tokens / wall_s"),
+            ("serving.mean_utilization", lambda: self.mean_utilization, "",
+             "mean decode-slot utilization"),
+            ("serving.mean_latency_s", lambda: self.mean_latency_s, "s",
+             "mean request latency"),
+            ("serving.migrations_per_replan",
+             lambda: self.migrations_per_replan, "",
+             "expert moves per replan pass"),
+        ):
+            self.registry.derived(name, fn, unit=unit, desc=desc,
+                                  source="LoopStats")
 
     @property
     def tokens_per_s(self) -> float:
@@ -100,9 +139,10 @@ class LoopStats:
     def mean_latency_s(self) -> float:
         return float(np.mean(self.latencies_s)) if self.latencies_s else 0.0
 
-    @staticmethod
-    def _pct(xs: List[float], q: float) -> float:
-        return float(np.percentile(xs, q)) if xs else 0.0
+    # robust percentile (repro.obs.pct): empty -> 0.0, single sample ->
+    # itself, no numpy warnings — kept as a staticmethod for callers
+    # that used LoopStats._pct directly
+    _pct = staticmethod(pct)
 
     @property
     def ttft_p50_s(self) -> float:
@@ -209,6 +249,15 @@ class ServingLoop:
     archs (chunk state cannot be threaded through a token-keyed cache)
     and the contiguous `kv_layout="slots"` fall back to whole-suffix
     admission prefill.
+
+    OBSERVABILITY (repro.obs): `obs=` accepts an `Observability` (share
+    a registry/tracer) or an `ObsConfig`, resolved with the same
+    precedence rule as `scheduler=`: explicit kwarg > `cfg.obs` >
+    defaults (metrics on, tracing off). The loop, engine, and predictor
+    register their stats on ONE registry (`loop.stats.snapshot()` shows
+    all three) and, with `ObsConfig(trace=True)`, emit nested spans +
+    the tier timeline to one tracer — export with
+    `loop.obs.export_trace(path)` or tools/export_trace.py.
     """
 
     def __init__(
@@ -237,6 +286,7 @@ class ServingLoop:
         chunked_prefill: bool = True,
         prefill_chunk_tokens: Optional[int] = None,
         scheduler: Optional[SchedulerPolicy] = None,
+        obs=None,  # Observability | ObsConfig | None (repro.obs)
     ):
         assert cfg.moe is not None, "ServingLoop drives the TriMoE MoE path"
         assert kv_layout in ("paged", "slots"), kv_layout
@@ -253,6 +303,13 @@ class ServingLoop:
             caller="ServingLoop",
         )
         cfg = dataclasses.replace(cfg, scheduler=self.policy)
+        # observability resolves the same way: explicit obs= > cfg.obs >
+        # defaults (metrics on, tracing off). One Observability bundle —
+        # registry + tracer — is shared with the engine and predictor,
+        # so loop/engine/predictor metrics land on ONE snapshot and all
+        # spans sit on one timeline.
+        self.obs = resolve_obs(cfg, obs, caller="ServingLoop")
+        self._tr = self.obs.tracer
         self.cfg = cfg
         self.paged = kv_layout == "paged"
         from repro.serving.paged_kv import prefix_cacheable
@@ -292,7 +349,7 @@ class ServingLoop:
             cfg, params, self.kv, tiered, sizes=sizes,
             cold_capacity_frac=cold_capacity_frac,
             prefill_rows=prefill_rows or min(batch_size, 4),
-            scheduler=self.policy,
+            scheduler=self.policy, obs=self.obs,
         )
         # budgeted suffix tokens per piggyback chunk call: the bound on
         # how long any single prefill call can stall decode. 32 balances
@@ -302,7 +359,7 @@ class ServingLoop:
             prefill_chunk_tokens = 32
         assert prefill_chunk_tokens >= 1
         self.prefill_chunk_tokens = prefill_chunk_tokens
-        self.stats = LoopStats()
+        self.stats = LoopStats(self.obs.registry)
         self.completions: List[Request] = []
         self._t_admit: Dict[int, float] = {}
         self._t_submit: Dict[int, float] = {}
@@ -346,6 +403,10 @@ class ServingLoop:
             self.kv.free_slot(i, tokens=toks)
 
     def _admit(self) -> None:
+        with self._tr.span("admit"):
+            self._admit_inner()
+
+    def _admit_inner(self) -> None:
         freed, filled = self.batcher.admit()
         self._drain_completed()
         self._free_slots(freed)
@@ -432,6 +493,10 @@ class ServingLoop:
         the prompt, and rejoins decode."""
         if not self._prefill_tasks:
             return
+        with self._tr.span("prefill_chunk"):
+            self._prefill_chunk()
+
+    def _prefill_chunk(self) -> None:
         rows: List[tuple] = []  # (task, chunk size)
         left = self.prefill_chunk_tokens
         for t in self._prefill_tasks:
@@ -531,7 +596,8 @@ class ServingLoop:
         self._steps_since_replan = 0
         st, es = self.stats, eng.stats
         thrash_before = es.thrash_events
-        self._planned = eng.plan_migrations()
+        with self._tr.span("replan", cat="scheduler"):
+            self._planned = eng.plan_migrations()
         st.replans += 1
         st.migrations += sum(
             int((plan[:, 0] >= 0).sum()) for _, plan in self._planned
@@ -544,48 +610,65 @@ class ServingLoop:
         """One scheduling iteration: admit, one piggyback prefill chunk,
         one zigzag-group decode step, then the replan flush. Public so a
         trace replay driver (serving/replay.py) can interleave arrivals
-        at exact loop iterations; call `finish()` when done."""
-        self._admit()
-        # piggyback: one budgeted prefill chunk rides along with
-        # this iteration's decode step (chunked_prefill)
-        self._prefill_step()
-        gb = self.batcher.next_group()
-        self.stats.util_sum += self.batcher.utilization
-        self.stats.util_samples += 1
-        if gb is None:
-            # the active group is idle — use its step slot for any
-            # outstanding migration work instead
-            self.stats.idle_steps += 1
-            self._flush_replan()
-            return
-        _, idxs, toks, pos, live = gb
-        if self.paged:
-            for row, i in enumerate(idxs):
-                if live[row]:
-                    # on-demand block alloc at block boundaries,
-                    # copy-on-write if the tail block is shared
-                    self.kv.ensure_block(i, int(pos[row]))
-            logits, counts = self.engine.step_slots_paged(
-                toks, pos, idxs, self.kv.table_rows(idxs), live=live
-            )
-        else:
-            logits, counts = self.engine.step_slots(toks, pos, idxs, live=live)
-        # zigzag overlap: while this group's step runs on the device,
-        # the host applies + replans migrations from previous loads
-        self._flush_replan()
-        self._pending_counts = counts
-        nxt = np.asarray(jnp.argmax(logits, -1))
-        live_idx = [i for i, alive in zip(idxs, live) if alive]
-        self.batcher.record(live_idx, nxt[live])
-        self.stats.decode_steps += 1
-        self.stats.generated_tokens += len(live_idx)
-        now = time.time()
-        for i in live_idx:
-            rid = self.batcher.slots[i].request.rid
-            prev = self._t_last_tok.get(rid)
-            if prev is not None:
-                self.stats.itl_s.append(now - prev)
-            self._t_last_tok[rid] = now
+        at exact loop iterations; call `finish()` when done.
+
+        With tracing enabled (repro.obs) each iteration is one nested
+        span tree: step > {admit, prefill_chunk, decode > {replan,
+        migrate}} plus a per-step slot-occupancy counter track — the
+        "where did this step's time go" view."""
+        tr = self._tr
+        with tr.span("step"):
+            self._admit()
+            # piggyback: one budgeted prefill chunk rides along with
+            # this iteration's decode step (chunked_prefill)
+            self._prefill_step()
+            gb = self.batcher.next_group()
+            self.stats.util_sum += self.batcher.utilization
+            self.stats.util_samples += 1
+            if tr.enabled:
+                tr.counter("loop/slots", {
+                    "utilization": self.batcher.utilization,
+                    "queued": len(self.batcher.queue),
+                    "prefill_tasks": len(self._prefill_tasks),
+                })
+            if gb is None:
+                # the active group is idle — use its step slot for any
+                # outstanding migration work instead
+                self.stats.idle_steps += 1
+                self._flush_replan()
+                return
+            _, idxs, toks, pos, live = gb
+            with tr.span("decode"):
+                if self.paged:
+                    for row, i in enumerate(idxs):
+                        if live[row]:
+                            # on-demand block alloc at block boundaries,
+                            # copy-on-write if the tail block is shared
+                            self.kv.ensure_block(i, int(pos[row]))
+                    logits, counts = self.engine.step_slots_paged(
+                        toks, pos, idxs, self.kv.table_rows(idxs), live=live
+                    )
+                else:
+                    logits, counts = self.engine.step_slots(
+                        toks, pos, idxs, live=live
+                    )
+                # zigzag overlap: while this group's step runs on the
+                # device, the host applies + replans migrations from
+                # previous loads
+                self._flush_replan()
+                self._pending_counts = counts
+                nxt = np.asarray(jnp.argmax(logits, -1))
+            live_idx = [i for i, alive in zip(idxs, live) if alive]
+            self.batcher.record(live_idx, nxt[live])
+            self.stats.decode_steps += 1
+            self.stats.generated_tokens += len(live_idx)
+            now = time.time()
+            for i in live_idx:
+                rid = self.batcher.slots[i].request.rid
+                prev = self._t_last_tok.get(rid)
+                if prev is not None:
+                    self.stats.itl_s.append(now - prev)
+                self._t_last_tok[rid] = now
 
     def finish(self) -> None:
         """Settle all deferred scheduling work (observe + plan + apply)
@@ -604,8 +687,9 @@ class ServingLoop:
         """Drive until every submitted request completes (or max_steps
         group rotations elapse). Returns the completed requests in
         completion order; per-request tokens are in Request.generated.
-        wall_s ACCUMULATES across run() calls (reset stats between
-        timed passes, as serving_bench does)."""
+        wall_s — like every LoopStats metric — ACCUMULATES across run()
+        calls; call `self.stats.reset()` between timed passes (as
+        serving_bench does) to start a fresh window."""
         t_start = time.time()
         steps = 0
         while self._work_remaining():

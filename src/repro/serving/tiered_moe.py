@@ -22,6 +22,7 @@ from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.hardware import TPU_V5E
 from repro.models.layers import Params, dense_init
@@ -29,6 +30,25 @@ from repro.models.moe import expert_ffn, moe_backend, router_topk, shared_ffn
 
 HOT_T, WARM_T, COLD_T = 0, 1, 2
 TIER_KEYS = ("hot", "warm", "cold")
+
+
+def tier_occupancy(tiers, ema=None) -> Dict[str, float]:
+    """Host-side tier-timeline sample for the observability channel
+    (repro.obs): per-tier expert counts aggregated over every MoE layer
+    from a [L, E] (or [E]) tier array — the predictor's `decided` grid
+    or a layer's `expert_tier` table — plus, when the predictor's [L, E]
+    EMA is given, the predicted load mass currently sitting in each
+    tier. Emitted as Perfetto counter tracks at every replan, so
+    relayout decisions are visually auditable against skew-phase
+    shifts."""
+    t = np.asarray(tiers)
+    out: Dict[str, float] = {}
+    for tid, key in enumerate(TIER_KEYS):
+        mask = t == tid
+        out[f"{key}_experts"] = int(mask.sum())
+        if ema is not None:
+            out[f"{key}_load"] = float(np.asarray(ema)[mask].sum())
+    return out
 
 
 class TierSizes(NamedTuple):

@@ -1,0 +1,238 @@
+"""Observability layer tests: the metrics registry and stat facades
+(percentile edge cases, get-or-create typing, the accumulate-vs-reset
+contract, shared-registry wiring across loop/engine/predictor), the
+tracer (zero-cost when disabled, trace_event export round-trip with
+span nesting under a smoke serving run), and the `resolve_obs`
+precedence rule (explicit obs= > cfg.obs > defaults)."""
+import dataclasses
+import json
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.models.model import init_params
+from repro.obs import (
+    NULL_SPAN,
+    MetricsRegistry,
+    Observability,
+    ObsConfig,
+    Tracer,
+    pct,
+    resolve_obs,
+)
+from repro.obs.trace import load_trace, validate_trace_events
+from repro.serving.batching import Request
+from repro.serving.loop import LoopStats, ServingLoop
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduce_for_smoke(get_config("granite-moe-1b-a400m"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _requests(cfg, n=4, new_tokens=3, seed=7):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            rid=rid,
+            prompt=rng.integers(0, cfg.vocab_size, 4 + rid % 3)
+            .astype(np.int32),
+            max_new_tokens=new_tokens,
+        )
+        for rid in range(n)
+    ]
+
+
+def _serve(loop, reqs):
+    for r in reqs:
+        loop.submit(r)
+    return loop.run(max_steps=500)
+
+
+# ------------------------------------------------ percentile edge cases
+def test_pct_empty_and_single_sample_no_warnings():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # any numpy warning fails the test
+        assert pct([], 50) == 0.0
+        assert pct([], 95) == 0.0
+        assert pct([0.25], 50) == 0.25
+        assert pct([0.25], 95) == 0.25
+        assert pct([1.0, 3.0], 50) == 2.0
+
+
+def test_stats_percentiles_defined_on_empty_and_single():
+    st = LoopStats()
+    assert st.ttft_p50_s == 0.0 and st.ttft_p95_s == 0.0
+    assert st.itl_p50_s == 0.0 and st.plan_p95_s == 0.0
+    st.ttft_s.append(0.5)
+    assert st.ttft_p50_s == 0.5 and st.ttft_p95_s == 0.5
+
+
+# -------------------------------------------------------- the registry
+def test_registry_get_or_create_and_kind_mismatch():
+    reg = MetricsRegistry()
+    c = reg.counter("x.n", unit="1", desc="a counter")
+    assert reg.counter("x.n") is c  # get-or-create returns the same
+    with pytest.raises(ValueError):
+        reg.gauge("x.n")  # same name, different kind
+    h = reg.histogram("x.lat_s", unit="s")
+    h.append(0.1)
+    h.append(0.3)
+    c.add(2)
+    snap = reg.snapshot()
+    assert snap["x.n"] == 2
+    assert snap["x.lat_s.count"] == 2
+    assert snap["x.lat_s.p50"] == pytest.approx(0.2)
+    assert "x.n" in reg and "nope" not in reg
+
+
+def test_registry_prometheus_text():
+    reg = MetricsRegistry()
+    reg.counter("serving.admitted", unit="requests", desc="admitted").add(3)
+    reg.histogram("serving.ttft_s", unit="s").append(0.5)
+    text = reg.prometheus_text()
+    assert "# TYPE serving_admitted_requests counter" in text
+    assert "serving_admitted_requests 3" in text
+    assert 'quantile="0.5"' in text
+
+
+def test_facade_reset_is_scoped_registry_reset_is_global():
+    reg = MetricsRegistry()
+    st = LoopStats(reg)
+    other = reg.counter("other.n")
+    st.admitted += 2
+    st.wall_s += 1.5
+    st.ttft_s.append(0.1)
+    other.add(5)
+    st.reset()  # facade reset: only serving.* instruments
+    assert st.admitted == 0 and st.wall_s == 0.0 and st.ttft_s == []
+    assert reg.snapshot()["other.n"] == 5
+    reg.reset()  # registry reset: everything
+    assert reg.snapshot()["other.n"] == 0
+
+
+# ---------------------------------------- accumulate-vs-reset contract
+def test_wall_s_accumulates_across_runs_and_reset_clears(setup):
+    cfg, params = setup
+    loop = ServingLoop(cfg, params, batch_size=2, n_groups=1, cache_len=16)
+    _serve(loop, _requests(cfg, n=2, seed=1))
+    first = loop.stats.wall_s
+    first_tokens = loop.stats.generated_tokens
+    assert first > 0 and first_tokens > 0
+    _serve(loop, _requests(cfg, n=2, seed=2))
+    # documented contract: metrics ACCUMULATE across run() calls
+    assert loop.stats.wall_s > first
+    assert loop.stats.generated_tokens == 2 * first_tokens
+    # the regression this guards: reset() starts a fresh window
+    loop.stats.reset()
+    assert loop.stats.wall_s == 0.0
+    assert loop.stats.generated_tokens == 0
+    _serve(loop, _requests(cfg, n=2, seed=3))
+    assert loop.stats.wall_s > 0
+    assert loop.stats.generated_tokens == first_tokens
+
+
+# ------------------------------------------------------------- tracing
+def test_disabled_tracer_is_null_and_empty():
+    tr = Tracer(enabled=False)
+    s = tr.span("step", phase=1)
+    assert s is NULL_SPAN  # shared singleton: no per-call allocation
+    with s:
+        pass
+    tr.instant("x")
+    tr.counter("y", {"v": 1.0})
+    assert tr.events == []
+    assert tr.to_trace_events() == [] or all(
+        e.get("ph") == "M" for e in tr.to_trace_events()
+    )
+
+
+def test_loop_with_tracing_disabled_records_no_events(setup):
+    cfg, params = setup
+    loop = ServingLoop(cfg, params, batch_size=2, n_groups=1, cache_len=16)
+    _serve(loop, _requests(cfg, n=2))
+    assert loop.obs.tracer.enabled is False
+    assert loop.obs.tracer.events == []
+
+
+def test_trace_export_round_trip(setup, tmp_path):
+    cfg, params = setup
+    path = str(tmp_path / "smoke.trace.json")
+    loop = ServingLoop(cfg, params, batch_size=4, n_groups=2, cache_len=16,
+                       obs=ObsConfig(trace=True, trace_path=path))
+    done = _serve(loop, _requests(cfg, n=6))
+    assert len(done) == 6
+    loop.obs.export_trace()
+
+    with open(path) as f:
+        doc = json.load(f)  # must parse as plain JSON
+    assert isinstance(doc["traceEvents"], list)
+    events = load_trace(path)
+    assert validate_trace_events(events) == []  # fields + nesting
+
+    names = {e["name"] for e in events}
+    for want in ("step", "admit", "decode", "replan"):
+        assert want in names, f"missing {want} span"
+    # spans nest: every decode span lies inside some step span
+    spans = {n: [(e["ts"], e["ts"] + e["dur"]) for e in events
+                 if e.get("ph") == "X" and e["name"] == n]
+             for n in ("step", "decode")}
+    assert spans["decode"]
+    for s0, s1 in spans["decode"]:
+        assert any(t0 <= s0 and s1 <= t1 for t0, t1 in spans["step"])
+
+
+def test_kernel_spans_on_shared_timeline(setup, tmp_path):
+    from repro.kernels.backend import set_kernel_tracer
+
+    cfg, params = setup
+    loop = ServingLoop(cfg, params, batch_size=2, n_groups=1, cache_len=16,
+                       obs=ObsConfig(trace=True))
+    try:
+        _serve(loop, _requests(cfg, n=2, seed=11))
+        names = {e["name"] for e in loop.obs.tracer.events}
+        kernel = {n for n in names if n.startswith("kernel.")}
+        # op wrappers are jit'd: spans fire at trace/compile time, so a
+        # fresh shape set compiles at least the paged attention ops
+        assert kernel, f"no kernel.* spans among {sorted(names)}"
+    finally:
+        set_kernel_tracer(None)  # don't leak the process-global tracer
+
+
+# ------------------------------------------------ shared registry wiring
+def test_loop_engine_predictor_share_one_registry(setup):
+    cfg, params = setup
+    loop = ServingLoop(cfg, params, batch_size=2, n_groups=1, cache_len=16)
+    assert loop.stats.registry is loop.engine.stats.registry
+    assert loop.stats.registry is loop.engine.predictor.stats.registry
+    _serve(loop, _requests(cfg, n=2, seed=5))
+    snap = loop.stats.snapshot()
+    assert snap["serving.completed"] == 2
+    assert snap["engine.steps"] > 0
+    assert "predictor.accuracy" in snap
+
+
+# --------------------------------------------------- resolve_obs rule
+def test_resolve_obs_precedence(setup):
+    cfg, _ = setup
+    # defaults: metrics on, tracing off
+    out = resolve_obs(cfg, None)
+    assert isinstance(out, Observability) and not out.tracer.enabled
+    # cfg.obs is used when no explicit obs=
+    cfg_traced = dataclasses.replace(cfg, obs=ObsConfig(trace=True))
+    assert resolve_obs(cfg_traced, None).tracer.enabled
+    # explicit obs= beats cfg.obs
+    explicit = Observability(ObsConfig(trace=False))
+    assert resolve_obs(cfg_traced, explicit) is explicit
+    # an Observability is adopted as-is (shared registry/tracer)
+    assert resolve_obs(None, explicit).registry is explicit.registry
+    with pytest.raises(TypeError):
+        resolve_obs(cfg, obs="yes please")
+    from repro.kernels.backend import set_kernel_tracer
+
+    set_kernel_tracer(None)  # resolve_obs(cfg_traced) installed one
