@@ -1232,6 +1232,13 @@ def main(argv=None):
                          "is reported (noise floor for the gates)")
     args = ap.parse_args(argv)
 
+    if args.smoke:
+        # smoke runs double as integration tests: sweep the paged-KV
+        # invariants every mutating call (kv_sanitizer; fast-tier CI
+        # runs every smoke gate with this on)
+        from repro.serving.kv_sanitizer import ENV_FLAG
+
+        os.environ.setdefault(ENV_FLAG, "1")
     if args.mixed:
         return run_mixed(args)
     if args.prefix:

@@ -7,6 +7,20 @@ TriMoE simulator benchmarks.
 """
 from __future__ import annotations
 
+from repro.configs import (
+    chameleon_34b,
+    deepseek_v2_236b,
+    glm_4_5_air,
+    granite_20b,
+    granite_moe_1b_a400m,
+    jamba_v0_1_52b,
+    llama3_2_3b,
+    phi4_mini_3_8b,
+    qwen2_5_32b,
+    qwen3_235b_a22b,
+    seamless_m4t_large_v2,
+    xlstm_125m,
+)
 from repro.configs.base import (
     ALL_SHAPES,
     DECODE_32K,
@@ -22,21 +36,6 @@ from repro.configs.base import (
     XLSTMConfig,
     reduce_for_smoke,
     shape_applicable,
-)
-
-from repro.configs import (  # noqa: E402
-    chameleon_34b,
-    deepseek_v2_236b,
-    glm_4_5_air,
-    granite_20b,
-    granite_moe_1b_a400m,
-    jamba_v0_1_52b,
-    llama3_2_3b,
-    phi4_mini_3_8b,
-    qwen2_5_32b,
-    qwen3_235b_a22b,
-    seamless_m4t_large_v2,
-    xlstm_125m,
 )
 
 ASSIGNED: tuple[str, ...] = (

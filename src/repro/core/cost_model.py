@@ -25,7 +25,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.hardware import TRIMOE_HW, TPU_V5E, TriMoEHardware, TPUv5e
+from repro.hardware import TPU_V5E, TRIMOE_HW, TPUv5e, TriMoEHardware
 
 STRIPED, LOCALIZED = 0, 1
 GPU, CPU, NDP = 0, 1, 2

@@ -21,6 +21,7 @@ window surface as visible overhead (paper: <3.3%).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -40,7 +41,6 @@ from repro.core.relayout import RelayoutEngine
 from repro.core.scheduler import ExpertPlacement, MakespanScheduler, Schedule
 from repro.core.tiers import COLD, HOT, WARM, TierThresholds
 from repro.hardware import TRIMOE_HW, TriMoEHardware
-import dataclasses
 
 
 # ------------------------------------------------------------- sim model
@@ -149,16 +149,16 @@ class TriMoESimulator:
         )
         self.rng = np.random.default_rng(seed)
 
-        l, e = model.n_moe_layers, model.n_experts
+        nl, ne = model.n_moe_layers, model.n_experts
         w = self.shape.weight_bytes
         # HBM budget caps the resident hot set; the offloading regime the
         # paper targets keeps >90% of routed experts off-GPU, so the hot
         # set never exceeds E/8 even for small models that would fit.
         self.hot_slots_per_layer = min(
-            max(1, int(flags.hbm_expert_bytes / w / max(l, 1))),
-            max(1, e // 8),
+            max(1, int(flags.hbm_expert_bytes / w / max(nl, 1))),
+            max(1, ne // 8),
         )
-        self.predictor = EMALoadPredictor(l, e, thresholds=thresholds)
+        self.predictor = EMALoadPredictor(nl, ne, thresholds=thresholds)
         self.relayout = RelayoutEngine(
             self.cm, self.shape, hbm_expert_slots=self.hot_slots_per_layer,
             thresholds=thresholds,
@@ -271,9 +271,9 @@ class TriMoESimulator:
 
         for t in range(total):
             measured = t >= warmup
-            for l in range(model.n_moe_layers):
-                loads = self.trace[t, l].astype(np.float64)
-                pls = self.placements[l]
+            for li in range(model.n_moe_layers):
+                loads = self.trace[t, li].astype(np.float64)
+                pls = self.placements[li]
                 if flags.policy == "klotski":
                     sc = self._layer_klotski(loads, pls)
                 elif flags.policy == "enkt":
@@ -295,8 +295,8 @@ class TriMoESimulator:
                     useful["ndp"] += sc.ndp_compute
 
                 # ---- background migration for the NEXT layer (paper §4.3)
-                self.predictor.update(l, loads)
-                nxt = (l + 1) % model.n_moe_layers
+                self.predictor.update(li, loads)
+                nxt = (li + 1) % model.n_moe_layers
                 if flags.policy in ("monde", "gpu_ndp"):
                     # weight-migration-to-GPU only (MoNDE's trade-off)
                     self._prefetch_only(nxt)

@@ -10,7 +10,7 @@ def expert_ffn_ref(x, w1, w3, w2):
 
     y = (silu(x @ w1) * (x @ w3)) @ w2  — one expert's SwiGLU FFN.
     """
-    g = jnp.einsum("td,df->tf", x, w1)
-    u = jnp.einsum("td,df->tf", x, w3)
+    g = jnp.einsum("td,df->tf", x, w1)  # repro-lint: disable=RL002 -- oracle defines the contract in model dtype
+    u = jnp.einsum("td,df->tf", x, w3)  # repro-lint: disable=RL002 -- oracle defines the contract in model dtype
     h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
-    return jnp.einsum("tf,fd->td", h, w2)
+    return jnp.einsum("tf,fd->td", h, w2)  # repro-lint: disable=RL002 -- oracle defines the contract in model dtype

@@ -14,4 +14,4 @@ def attention_ref(q, k, v, causal: bool = True):
         s = jnp.where(mask, s, -1e30)
     p = jnp.exp(s - s.max(-1, keepdims=True))
     p = p / p.sum(-1, keepdims=True)
-    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)  # repro-lint: disable=RL002 -- PV accumulation in v.dtype IS the reference semantics kernels are gated against

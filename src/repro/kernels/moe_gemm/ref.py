@@ -18,7 +18,7 @@ def moe_gemm_ref(x: jnp.ndarray, w: jnp.ndarray, group_sizes: jnp.ndarray) -> jn
     expert_of = jnp.searchsorted(ends, jnp.arange(t), side="right")
     expert_of = jnp.clip(expert_of, 0, e - 1)
     w_per_tok = jnp.take(w, expert_of, axis=0)  # [T, D, F]
-    return jnp.einsum("td,tdf->tf", x, w_per_tok)
+    return jnp.einsum("td,tdf->tf", x, w_per_tok)  # repro-lint: disable=RL002 -- oracle defines the contract in model dtype
 
 
 def grouped_ffn_ref(
@@ -36,7 +36,7 @@ def grouped_ffn_ref(
         w_gate = jnp.take(w_gate, group_expert, axis=0)
         w_up = jnp.take(w_up, group_expert, axis=0)
         w_down = jnp.take(w_down, group_expert, axis=0)
-    g = jnp.einsum("ecd,edf->ecf", h, w_gate)
-    u = jnp.einsum("ecd,edf->ecf", h, w_up)
+    g = jnp.einsum("ecd,edf->ecf", h, w_gate)  # repro-lint: disable=RL002 -- oracle mirrors the historical inline einsum path verbatim
+    u = jnp.einsum("ecd,edf->ecf", h, w_up)  # repro-lint: disable=RL002 -- oracle mirrors the historical inline einsum path verbatim
     a = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * u
-    return jnp.einsum("ecf,efd->ecd", a, w_down)
+    return jnp.einsum("ecf,efd->ecd", a, w_down)  # repro-lint: disable=RL002 -- oracle mirrors the historical inline einsum path verbatim

@@ -102,9 +102,9 @@ def mamba_forward(
     def step(h0, inp):
         ab, bxc = inp  # [B,c,Di,N]
 
-        def combine(l, r):
-            al, bl = l
-            ar, br = r
+        def combine(lhs, rhs):
+            al, bl = lhs
+            ar, br = rhs
             return al * ar, ar * bl + br
 
         a_cum, b_cum = jax.lax.associative_scan(combine, (ab, bxc), axis=1)

@@ -14,13 +14,13 @@ from repro.serving.kv_cache import (
     scatter_slots,
 )
 from repro.serving.loop import LoopStats, ServingLoop
-from repro.serving.replay import ReplayResult, replay_requests, requests_from_trace
 from repro.serving.paged_kv import (
     PagedKVCache,
     RadixPrefixIndex,
     init_paged_cache,
     prefix_cacheable,
 )
+from repro.serving.replay import ReplayResult, replay_requests, requests_from_trace
 from repro.serving.tiered_moe import (
     TierSizes,
     apply_migrations,

@@ -474,6 +474,14 @@ class TriMoEServingEngine:
         # (possibly shared / radix-indexed) blocks before recycling
         tables = np.array(tables, np.int32, copy=True)
         tables[~live] = self.kv.trash
+        if self.kv.sanitizer is not None:
+            # the blocks this step's token writes actually land in: each
+            # row's table entry at its decode position (dead rows were
+            # just trash-routed above — validated on the real values)
+            lb = np.clip(pos // self.kv.block_size, 0, tables.shape[1] - 1)
+            self.kv.sanitizer.check_scatter_targets(
+                tables[np.arange(len(pos)), lb], live
+            )
         width = self._active_table_width(pos, live)
         self.decode_table_widths.add(width)
         tables = tables[:, :width]
@@ -532,6 +540,18 @@ class TriMoEServingEngine:
             lens[:nr] = lengths[c0:c0 + nr]
             past[:nr] = past_len[c0:c0 + nr]
             tables[:nr] = self.kv.table_rows(slot_indices[c0:c0 + nr])[:, :tw]
+            if self.kv.sanitizer is not None:
+                # every block this chunk writes — the suffix span
+                # [past, past+len) of each real row — must be private;
+                # dummy pad rows must be all-trash
+                bs = self.kv.block_size
+                bids, mask = [], []
+                for j in range(r):
+                    lo, hi = int(past[j]) // bs, -(-int(past[j] + lens[j]) // bs)
+                    span = tables[j, lo:hi] if j < nr else tables[j]
+                    bids.extend(span.tolist())
+                    mask.extend([j < nr] * len(span))
+                self.kv.sanitizer.check_scatter_targets(bids, mask)
             logits, self.kv.pools, row_states = self._prefill_paged(
                 self.params, jnp.asarray(toks), jnp.asarray(lens),
                 jnp.asarray(past), jnp.asarray(tables), self.kv.pools,

@@ -34,7 +34,8 @@ def cache_spec(cfg: ModelConfig, batch: int, seq: int):
 def cache_bytes(cfg: ModelConfig, batch: int, seq: int) -> int:
     spec = cache_spec(cfg, batch, seq)
     return sum(
-        int(np.prod(l.shape)) * l.dtype.itemsize for l in jax.tree.leaves(spec)
+        int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        for leaf in jax.tree.leaves(spec)
     )
 
 

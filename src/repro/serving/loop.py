@@ -281,6 +281,7 @@ class ServingLoop:
         block_size: int = 4,
         kv_pool_blocks: Optional[int] = None,
         prefix_cache: bool = True,
+        kv_sanitize: Optional[bool] = None,  # None -> $REPRO_KV_SANITIZE
         paged_attn_backend: Optional[str] = None,
         moe_backend: Optional[str] = None,
         chunked_prefill: bool = True,
@@ -323,6 +324,7 @@ class ServingLoop:
             self.kv = PagedKVCache(
                 cfg, batch_size, cache_len, block_size=block_size,
                 n_blocks=kv_pool_blocks, prefix_cache=prefix_cache,
+                sanitize=kv_sanitize,
             )
             reclaimed = self.kv.reclaimed_bytes(cache_len)
         else:

@@ -37,8 +37,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models.model import SEQ_CACHE_KEYS, init_cache, stack_plan, layer_signature
+from repro.models.model import SEQ_CACHE_KEYS, init_cache, layer_signature, stack_plan
 from repro.serving.kv_cache import cache_bytes
+from repro.serving.kv_sanitizer import KVSanitizer, SanitizerError, sanitize_default
 
 
 def prefix_cacheable(cfg: ModelConfig) -> bool:
@@ -252,6 +253,7 @@ class PagedKVCache:
         block_size: int = 4,
         n_blocks: Optional[int] = None,
         prefix_cache: bool = True,
+        sanitize: Optional[bool] = None,
     ):
         assert cfg.encdec is None, "paged KV does not support enc-dec"
         bs = block_size
@@ -280,6 +282,13 @@ class PagedKVCache:
             if prefix_cache and prefix_cacheable(cfg) else None
         )
         self.stats = PagedStats()
+        # None = resolve from $REPRO_KV_SANITIZE (tests turn it on suite-
+        # wide). Off-mode cost is one attribute test per mutating call.
+        if sanitize is None:
+            sanitize = sanitize_default()
+        self.sanitizer: Optional[KVSanitizer] = (
+            KVSanitizer(self) if sanitize else None
+        )
 
     # ------------------------------------------------------- accounting
     @property
@@ -337,7 +346,12 @@ class PagedKVCache:
         )
 
     def _decref(self, bid: int) -> None:
-        assert self.refcount[bid] > 0, f"double free of block {bid}"
+        if self.refcount[bid] <= 0:
+            raise SanitizerError(
+                "double_free",
+                f"releasing block {bid} with refcount "
+                f"{int(self.refcount[bid])}", block=int(bid),
+            )
         self.refcount[bid] -= 1
         if self.refcount[bid] == 0 and (
             self.radix is None or bid not in self.radix
@@ -389,6 +403,8 @@ class PagedKVCache:
         self.stats.peak_blocks_in_use = max(
             self.stats.peak_blocks_in_use, self.blocks_in_use
         )
+        if self.sanitizer is not None:
+            self.sanitizer.validate("admit_slot")
         return past
 
     def commit_prompt(self, slot: int, prompt) -> None:
@@ -418,6 +434,8 @@ class PagedKVCache:
             self.refcount[canon] += 1
             self._decref(dup)
             self.stats.dedup_blocks += 1
+        if self.sanitizer is not None:
+            self.sanitizer.validate("commit_prompt")
 
     def ensure_block(self, slot: int, pos: int) -> None:
         """Decode-time: make position `pos` writable for `slot` —
@@ -436,6 +454,11 @@ class PagedKVCache:
         elif self.refcount[bid] > 1:
             self.copy_on_write(slot, lb)
         self.lengths[slot] = max(self.lengths[slot], pos + 1)
+        if self.sanitizer is not None:
+            # post-condition first: a skipped COW is caught here even
+            # when the global bookkeeping still sweeps clean
+            self.sanitizer.check_writable(slot, pos)
+            self.sanitizer.validate("ensure_block")
 
     def copy_on_write(self, slot: int, logical_block: int) -> int:
         """Divergence into a shared block: give `slot` a private copy of
@@ -459,6 +482,8 @@ class PagedKVCache:
         self._decref(old)
         self.tables[slot, logical_block] = new
         self.stats.cow_copies += 1
+        if self.sanitizer is not None:
+            self.sanitizer.validate("copy_on_write")
         return new
 
     def free_slot(self, slot: int, tokens=None) -> None:
@@ -474,6 +499,8 @@ class PagedKVCache:
             self.tables[slot, lb] = self.trash
         self.lengths[slot] = 0
         self._slot_free.append(slot)
+        if self.sanitizer is not None:
+            self.sanitizer.validate("free_slot")
 
     def free(self, slot_indices: Sequence[int]) -> None:
         """SlotKVCache-compatible eviction (no token indexing)."""

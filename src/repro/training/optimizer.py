@@ -32,7 +32,9 @@ class AdamWConfig:
 
 
 def adamw_init(params: Params, cfg: AdamWConfig = AdamWConfig()) -> Dict[str, Any]:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
+
     state = {
         "m": jax.tree.map(zeros, params),
         "v": jax.tree.map(zeros, params),
@@ -50,7 +52,10 @@ def _schedule(cfg: AdamWConfig, step):
 
 def global_norm(tree) -> jnp.ndarray:
     return jnp.sqrt(
-        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree))
+        sum(
+            jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+            for leaf in jax.tree.leaves(tree)
+        )
     )
 
 

@@ -4,6 +4,13 @@ import os
 # accidental device-count flags out of the test environment.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# Paged-KV sanitizer (serving/kv_sanitizer.py) default-ON for the whole
+# suite: every PagedKVCache built by any test sweeps its refcount/
+# free-list/radix invariants after each mutating call, so a bookkeeping
+# bug fails the FIRST step that breaks an invariant, not a downstream
+# numerics assert.
+os.environ.setdefault("REPRO_KV_SANITIZE", "1")
+
 import jax
 import pytest
 

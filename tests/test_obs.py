@@ -17,8 +17,8 @@ from repro.models.model import init_params
 from repro.obs import (
     NULL_SPAN,
     MetricsRegistry,
-    Observability,
     ObsConfig,
+    Observability,
     Tracer,
     pct,
     resolve_obs,

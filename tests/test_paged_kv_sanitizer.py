@@ -1,0 +1,184 @@
+"""Mutation tests for the paged-KV runtime sanitizer
+(serving/kv_sanitizer.py): inject the exact bug classes the sanitizer
+exists for and assert each raises its structured SanitizerError.
+
+The sweep runs default-on suite-wide (conftest sets $REPRO_KV_SANITIZE),
+so these tests are also the proof that the suite's green runs mean the
+invariants actually held — a sanitizer that cannot catch a planted bug
+gates nothing.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.serving.kv_sanitizer import KVSanitizer, SanitizerError, sanitize_default
+from repro.serving.paged_kv import PagedKVCache
+
+ARCH = "granite-moe-1b-a400m"
+BS = 4
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return reduce_for_smoke(get_config(ARCH))
+
+
+def make_kv(cfg, **kw):
+    kw.setdefault("sanitize", True)
+    return PagedKVCache(cfg, 4, 4 * BS, block_size=BS, **kw)
+
+
+def shared_pair(kv):
+    """Two slots sharing one radix-cached full prompt block. Returns the
+    shared physical block id (refcount 2)."""
+    prompt = list(range(1, BS + 2))  # one full block + 1 prefill token
+    kv.admit_slot(0, prompt)
+    kv.commit_prompt(0, prompt)
+    past = kv.admit_slot(1, prompt)
+    assert past == BS, "prefix hit expected — shared block setup broken"
+    shared = int(kv.tables[0, 0])
+    assert kv.tables[1, 0] == shared and kv.refcount[shared] == 2
+    return shared
+
+
+# ------------------------------------------------------- wiring sanity
+def test_sanitizer_default_resolves_from_env(cfg, monkeypatch):
+    monkeypatch.delenv("REPRO_KV_SANITIZE", raising=False)
+    assert not sanitize_default()
+    assert make_kv(cfg, sanitize=None).sanitizer is None
+    monkeypatch.setenv("REPRO_KV_SANITIZE", "1")
+    assert sanitize_default()
+    assert make_kv(cfg, sanitize=None).sanitizer is not None
+    # explicit beats ambient, both ways
+    assert make_kv(cfg, sanitize=False).sanitizer is None
+    monkeypatch.setenv("REPRO_KV_SANITIZE", "0")
+    kv = make_kv(cfg, sanitize=True)
+    assert isinstance(kv.sanitizer, KVSanitizer)
+
+
+def test_clean_lifecycle_passes(cfg):
+    kv = make_kv(cfg)
+    shared_pair(kv)
+    kv.ensure_block(1, BS + 1)  # decode into the tail (COW territory)
+    kv.free_slot(1)
+    kv.free_slot(0, tokens=list(range(1, BS + 2)))
+    kv.sanitizer.validate("final")
+
+
+# ------------------------------------------- planted bug 1: refcount
+def test_corrupted_refcount_raises(cfg):
+    kv = make_kv(cfg)
+    kv.admit_slot(0, [1, 2, 3, 4, 5])
+    bid = int(kv.tables[0, 0])
+    kv.refcount[bid] += 1  # the planted corruption
+    with pytest.raises(SanitizerError) as exc:
+        kv.free_slot(0)
+    assert exc.value.kind == "refcount_mismatch"
+    assert exc.value.block == bid
+
+
+def test_double_free_raises(cfg):
+    kv = make_kv(cfg)
+    kv.admit_slot(0, [1, 2, 3])
+    bid = int(kv.tables[0, 0])
+    kv.refcount[bid] = 0  # as if someone already released it
+    with pytest.raises(SanitizerError) as exc:
+        kv._decref(bid)
+    assert exc.value.kind == "double_free"
+    assert exc.value.block == bid
+
+
+# ---------------------------------------- planted bug 2: skipped COW
+def test_skipped_cow_raises_shared_write(cfg, monkeypatch):
+    kv = make_kv(cfg)
+    shared = shared_pair(kv)
+    # the bug: divergence into the shared block no longer copies
+    monkeypatch.setattr(
+        PagedKVCache, "copy_on_write", lambda self, slot, lb: shared
+    )
+    with pytest.raises(SanitizerError) as exc:
+        # slot 1 writes into its (shared) block 0 — position BS - 1 is
+        # inside the radix-cached chunk both slots reference
+        kv.ensure_block(1, BS - 1)
+    assert exc.value.kind == "shared_write"
+    assert exc.value.block == shared
+    assert exc.value.slot == 1
+
+
+def test_honest_cow_keeps_block_private(cfg):
+    kv = make_kv(cfg)
+    shared = shared_pair(kv)
+    kv.ensure_block(1, BS - 1)  # real COW path
+    assert int(kv.tables[1, 0]) != shared
+    assert kv.refcount[shared] == 1
+    assert kv.stats.cow_copies == 1
+
+
+# ------------------------------- planted bug 3: pad row -> live block
+def test_pad_write_to_live_shared_block_raises(cfg):
+    kv = make_kv(cfg)
+    shared = shared_pair(kv)
+    # an engine that forgot the trash-routing: the dead row's scatter
+    # target is the live shared block instead of the trash sentinel
+    bids = np.array([int(kv.tables[1, 1]), shared], np.int32)
+    mask = np.array([True, False])
+    with pytest.raises(SanitizerError) as exc:
+        kv.sanitizer.check_scatter_targets(bids, mask)
+    assert exc.value.kind == "pad_write"
+    assert exc.value.block == shared
+    # the correctly trash-routed version of the same step passes
+    kv.sanitizer.check_scatter_targets(
+        np.array([int(kv.tables[1, 1]), kv.trash]), mask
+    )
+
+
+def test_live_row_into_shared_block_raises(cfg):
+    kv = make_kv(cfg)
+    shared = shared_pair(kv)
+    with pytest.raises(SanitizerError) as exc:
+        kv.sanitizer.check_scatter_targets([shared], [True])
+    assert exc.value.kind == "shared_write"
+
+
+# ------------------------------------------------ broader sweep teeth
+def test_freed_block_left_in_table_raises(cfg):
+    kv = make_kv(cfg)
+    kv.admit_slot(0, [1, 2, 3, 4, 5])
+    kv.admit_slot(1, [7, 8, 9])
+    # free slot 0's blocks behind the table's back
+    leaked_row = kv.tables[0].copy()
+    kv.tables[0] = kv.trash
+    with pytest.raises(SanitizerError) as exc:
+        kv.free_slot(1)
+    kv.tables[0] = leaked_row  # restore for error-kind stability
+    assert exc.value.kind == "refcount_mismatch"
+
+
+def test_radix_stamp_tamper_raises(cfg):
+    kv = make_kv(cfg)
+    prompt = list(range(1, 2 * BS + 2))
+    kv.admit_slot(0, prompt)
+    kv.commit_prompt(0, prompt)
+    leaf = kv.radix._nodes[int(kv.tables[0, 1])]
+    leaf.stamp = kv.radix._clock + 100  # LRU clock corruption
+    with pytest.raises(SanitizerError) as exc:
+        kv.sanitizer.validate("tamper")
+    assert exc.value.kind == "radix"
+
+
+def test_slot_length_beyond_blocks_raises(cfg):
+    kv = make_kv(cfg)
+    kv.admit_slot(0, [1, 2, 3])
+    kv.lengths[0] = 3 * BS  # claims tokens its table never allocated
+    with pytest.raises(SanitizerError) as exc:
+        kv.sanitizer.validate("tamper")
+    assert exc.value.kind == "slot_coherence"
+    assert exc.value.slot == 0
+
+
+def test_off_mode_skips_all_checks(cfg):
+    kv = make_kv(cfg, sanitize=False)
+    kv.admit_slot(0, [1, 2, 3, 4, 5])
+    kv.refcount[int(kv.tables[0, 0])] += 5  # corruption goes unnoticed
+    kv.free_slot(0)  # no sweep, no raise
+    assert kv.sanitizer is None

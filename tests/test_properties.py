@@ -86,10 +86,10 @@ def test_cost_model_monotone_in_load(load, layout_id):
     """More tokens never cost less on any device path."""
     layout = STRIPED if layout_id == 0 else LOCALIZED
     for fn in (
-        lambda l: CM.t_gpu_hit(SHAPE, l),
-        lambda l: CM.t_gpu_miss(SHAPE, l, layout),
-        lambda l: CM.t_cpu(SHAPE, l, layout),
-        lambda l: CM.t_ndp(SHAPE, l),
+        lambda n: CM.t_gpu_hit(SHAPE, n),
+        lambda n: CM.t_gpu_miss(SHAPE, n, layout),
+        lambda n: CM.t_cpu(SHAPE, n, layout),
+        lambda n: CM.t_ndp(SHAPE, n),
     ):
         assert fn(load + 1) >= fn(load) - 1e-12
 

@@ -1,0 +1,360 @@
+"""repro-lint self-tests (tools/analysis): each rule catches its bug
+class on a minimal synthetic file, stays quiet on the sanctioned
+pattern, and the suppression + baseline ratchet machinery behaves like
+tools/ci_check.py's seed-failure gate.
+
+Runs from the repo root (pytest puts the rootdir on sys.path, which is
+how `tools.analysis` imports here and in CI).
+"""
+import textwrap
+
+import pytest
+
+from tools.analysis import core, rules
+
+
+def lint_src(src, path="src/repro/kernels/x/k.py"):
+    live, suppressed, sups, err = core.lint_file(
+        path, source=textwrap.dedent(src)
+    )
+    assert err is None
+    return live, suppressed, sups
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ---------------------------------------------------------------- RL001
+def test_rl001_traced_branch_flagged():
+    live, _, _ = lint_src(
+        """
+        import jax
+
+        @jax.jit
+        def f(x, n):
+            if n > 3:
+                return x
+            return x + 1
+        """,
+        path="src/repro/serving/z.py",
+    )
+    assert rules_of(live) == ["RL001"]
+    assert "branches on traced value" in live[0].message
+
+
+def test_rl001_static_and_shape_branches_clean():
+    live, _, _ = lint_src(
+        """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("n",))
+        def f(x, n, y=None):
+            if n > 3:          # static: fine
+                x = x + 1
+            if y is None:      # identity test: fine
+                x = x * 2
+            if x.ndim == 2:    # shape metadata: fine
+                x = x[None]
+            for _ in range(len(x.shape)):
+                x = x + 0
+            return x
+        """,
+        path="src/repro/serving/z.py",
+    )
+    assert live == []
+
+
+def test_rl001_static_argnames_typo_flagged():
+    live, _, _ = lint_src(
+        """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("blokc_size",))
+        def f(x, block_size):
+            return x
+        """,
+        path="src/repro/serving/z.py",
+    )
+    assert any("matches no parameter" in f.message for f in live)
+
+
+def test_rl001_nonstatic_string_flag_flagged():
+    live, _, _ = lint_src(
+        """
+        import jax
+
+        @jax.jit
+        def f(x, mode="fast"):
+            return x
+        """,
+        path="src/repro/serving/z.py",
+    )
+    assert any("strings cannot trace" in f.message for f in live)
+
+
+# ---------------------------------------------------------------- RL002
+def test_rl002_bare_kernel_matmul_flagged():
+    live, _, _ = lint_src(
+        """
+        import jax.numpy as jnp
+
+        def k(a, b):
+            return jnp.dot(a, b)
+        """
+    )
+    assert rules_of(live) == ["RL002"]
+
+
+def test_rl002_pet_and_casts_clean():
+    live, _, _ = lint_src(
+        """
+        import jax.numpy as jnp
+
+        def k(a, b, c):
+            x = jnp.dot(a, b, preferred_element_type=jnp.float32)
+            y = jnp.einsum("ij,jk->ik", a, b).astype(jnp.float32)
+            z = jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+            return x + y + z
+        """
+    )
+    assert live == []
+
+
+def test_rl002_scoped_to_kernels():
+    live, _, _ = lint_src(
+        """
+        import jax.numpy as jnp
+
+        def f(a, b):
+            return jnp.dot(a, b)
+        """,
+        path="src/repro/serving/z.py",
+    )
+    assert live == []
+
+
+# ---------------------------------------------------------------- RL003
+def test_rl003_deprecated_kwargs_flagged():
+    live, _, _ = lint_src(
+        """
+        def f(loop_cls, mha, x):
+            loop = loop_cls(plan_size=4)
+            ServingLoop(cfg, p, thresholds=t)
+            mha(x, x, x, use_ref=True)
+            grouped_expert_ffn(h, w, interpret=True)
+        """,
+        path="benchmarks/z.py",
+    )
+    assert [f.rule for f in live] == ["RL003"] * 3
+    assert any("SchedulerPolicy" in f.message for f in live)
+
+
+def test_rl003_new_surface_and_raw_kernels_clean():
+    live, _, _ = lint_src(
+        """
+        def f(x):
+            loop = ServingLoop(cfg, p, scheduler=SchedulerPolicy(plan_size=4))
+            moe_gemm(x, w, gs, interpret=True)          # raw kernel API
+            paged_decode_gqa(q, k, v, t, p, interpret=True)
+            grouped_expert_ffn(h, w, backend="ref")
+        """,
+        path="benchmarks/z.py",
+    )
+    assert live == []
+
+
+# ---------------------------------------------------------------- RL004
+def test_rl004_bypass_patterns_flagged():
+    live, _, _ = lint_src(
+        """
+        from repro.obs.metrics import Counter
+
+        def f(reg, stats):
+            reg._metrics["x"] = 1
+            c = Counter("x")
+            stats.samples = []
+        """,
+        path="src/repro/serving/z.py",
+    )
+    assert [f.rule for f in live] == ["RL004"] * 3
+
+
+def test_rl004_facade_use_and_obs_internals_clean():
+    src = """
+        from repro.obs.metrics import Counter
+
+        def f(reg, stats):
+            reg.counter("x").inc()
+            stats.samples.append(1.0)
+            return reg.snapshot()
+        """
+    live, _, _ = lint_src(src, path="src/repro/serving/z.py")
+    assert live == []
+    # the registry itself may construct instruments
+    bypass = "def g(reg):\n    reg._metrics['x'] = 1\n"
+    live, _, _ = lint_src(bypass, path="src/repro/obs/exporters.py")
+    assert live == []
+
+
+# ---------------------------------------------------------------- RL005
+def test_rl005_unrouted_pool_write_flagged():
+    live, _, _ = lint_src(
+        """
+        def rogue_write(pool, tables, pos, val):
+            bid = tables[:, 0]
+            return pool.at[bid, pos].set(val)
+        """,
+        path="src/repro/models/attention.py",
+    )
+    assert rules_of(live) == ["RL005"]
+
+
+def test_rl005_allowlisted_helpers_and_slot_writes_clean():
+    live, _, _ = lint_src(
+        """
+        def paged_scatter(pool, tables, gpos, mask, val):
+            bid = jnp.where(mask, tables[:, 0], trash)
+            return pool.at[bid, gpos].set(val)
+
+        def gqa_decode(cache_k, rows, slot, k_new):
+            return cache_k.at[rows, slot].set(k_new)
+        """,
+        path="src/repro/models/attention.py",
+    )
+    assert live == []
+
+
+def test_rl005_scoped_to_paged_modules():
+    live, _, _ = lint_src(
+        """
+        def f(pool, bid, v):
+            return pool.at[bid].set(v)
+        """,
+        path="src/repro/serving/z.py",
+    )
+    assert live == []
+
+
+# --------------------------------------------- suppressions and RL006
+def test_suppression_with_justification_suppresses():
+    live, suppressed, sups = lint_src(
+        """
+        import jax.numpy as jnp
+
+        def k(a, b):
+            return jnp.dot(a, b)  # repro-lint: disable=RL002 -- oracle semantics
+        """
+    )
+    assert live == [] and len(suppressed) == 1
+    assert sups[0].justification == "oracle semantics"
+
+
+def test_disable_next_targets_following_line():
+    live, suppressed, _ = lint_src(
+        """
+        import jax.numpy as jnp
+
+        def k(a, b):
+            # repro-lint: disable-next=RL002 -- oracle semantics
+            return jnp.dot(a, b)
+        """
+    )
+    assert live == [] and len(suppressed) == 1
+
+
+def test_unjustified_suppression_is_rl006():
+    live, suppressed, _ = lint_src(
+        """
+        import jax.numpy as jnp
+
+        def k(a, b):
+            return jnp.dot(a, b)  # repro-lint: disable=RL002
+        """
+    )
+    assert len(suppressed) == 1  # the RL002 is silenced...
+    assert rules_of(live) == ["RL006"]  # ...but the hygiene rule fires
+    assert "justification" in live[0].message
+
+
+def test_stale_suppression_is_rl006():
+    live, _, _ = lint_src(
+        """
+        def f():
+            return 1  # repro-lint: disable=RL002 -- nothing here
+        """
+    )
+    assert rules_of(live) == ["RL006"]
+    assert "matches no finding" in live[0].message
+
+
+def test_suppression_inside_string_ignored():
+    live, _, sups = lint_src(
+        '''
+        DOC = """
+        example:  # repro-lint: disable=RL002 -- doc example
+        """
+        '''
+    )
+    assert live == [] and sups == []
+
+
+# ------------------------------------------------------------- ratchet
+def test_baseline_ratchet_roundtrip(tmp_path):
+    base = tmp_path / "suppressions.txt"
+    counts = {("a.py", "RL002"): 2, ("b.py", "RL003"): 1}
+    core.write_baseline(str(base), counts)
+    assert core.read_baseline(str(base)) == counts
+    # new suppression -> unbanked; removed suppression -> stale
+    drift_up = {("a.py", "RL002"): 3, ("b.py", "RL003"): 1}
+    unbanked, stale = core.baseline_drift(drift_up, counts)
+    assert unbanked == [("a.py", "RL002", 3, 2)] and stale == []
+    drift_down = {("a.py", "RL002"): 2}
+    unbanked, stale = core.baseline_drift(drift_down, counts)
+    assert unbanked == [] and stale == [("b.py", "RL003", 0, 1)]
+
+
+def test_cli_end_to_end(tmp_path, capsys):
+    bad = tmp_path / "src" / "repro" / "kernels" / "k.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import jax.numpy as jnp\n\ndef k(a, b):\n"
+                   "    return jnp.dot(a, b)\n")
+    base = tmp_path / "base.txt"
+    report = tmp_path / "repro_lint_report.json"
+    argv = [str(bad), "--baseline", str(base), "--report", str(report)]
+    assert core.main(argv) == 1  # live finding
+    out = capsys.readouterr().out
+    assert "RL002" in out
+    import json
+
+    rep = json.loads(report.read_text())
+    assert rep["finding_counts"] == {"RL002": 1} and not rep["clean"]
+    # suppress it, bank it, and the gate goes green
+    bad.write_text(bad.read_text().replace(
+        "jnp.dot(a, b)",
+        "jnp.dot(a, b)  # repro-lint: disable=RL002 -- test oracle"))
+    assert core.main(argv) == 1  # unbanked suppression still fails
+    assert core.main(argv + ["--update-baseline"]) == 0
+    assert core.main(argv) == 0  # banked: clean
+    capsys.readouterr()
+    # removing the suppression without trimming the baseline is stale
+    bad.write_text("import jax.numpy as jnp\n\ndef k(a, b):\n"
+                   "    return jnp.dot(a, b, "
+                   "preferred_element_type=jnp.float32)\n")
+    assert core.main(argv) == 1
+    assert "stale baseline entry" in capsys.readouterr().out
+
+
+def test_repo_tree_is_clean():
+    """The acceptance gate, as a test: the shipped tree lints clean
+    against the committed baseline."""
+    rc = core.main(["src", "tests", "benchmarks", "tools"])
+    assert rc == 0
+
+
+def test_rule_table_complete():
+    ids = [rid for rid, _, _ in rules.ALL_RULES]
+    assert ids == ["RL001", "RL002", "RL003", "RL004", "RL005"]
+    assert all(callable(fn) for _, _, fn in rules.ALL_RULES)

@@ -4,12 +4,12 @@ import pytest
 from repro.core.cost_model import (
     CPU,
     GPU,
+    GPU_L_HALF,
     LOCALIZED,
     NDP,
     STRIPED,
     CostModel,
     ExpertShape,
-    GPU_L_HALF,
 )
 from repro.core.scheduler import ExpertPlacement, MakespanScheduler
 

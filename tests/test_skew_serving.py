@@ -15,10 +15,9 @@ from repro.configs import get_config, reduce_for_smoke
 from repro.core.policy import SchedulerPolicy
 from repro.core.tiers import TierThresholds
 from repro.core.traces import synth_request_trace
+from repro.models.model import init_params
 from repro.serving.loop import ServingLoop
 from repro.serving.replay import replay_requests, requests_from_trace
-
-from repro.models.model import init_params
 
 N_REQ = 6
 NEW_TOKENS = 4

@@ -52,8 +52,8 @@ def test_predictor_band_on_traces():
     tr = generate_trace(SPEC)
     pred = EMALoadPredictor(6, 160)
     for t in range(48):
-        for l in range(6):
-            pred.update(l, tr[t, l])
+        for li in range(6):
+            pred.update(li, tr[t, li])
     # paper: >78% migration decision accuracy
     assert pred.stats.migration_accuracy >= 0.70
     assert pred.stats.accuracy >= 0.85

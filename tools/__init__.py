@@ -1,0 +1,3 @@
+"""Repo tooling: CI gates (`ci_check`), observability export
+(`export_trace`), and the repro-lint static analyzer (`analysis`,
+runnable as `python -m tools.analysis`)."""

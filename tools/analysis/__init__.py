@@ -1,0 +1,49 @@
+"""repro-lint: codebase-specific static analysis for the TriMoE repro.
+
+The serving stack rests on hand-maintained invariants that each bit us
+once before being guarded by a point regression test. This package makes
+them machine-checked. One rule per historical bug class:
+
+  RL001  recompile-hazard   Python `if`/`while`/`for range()` branching
+                            on traced values inside jit'd functions,
+                            static_argnames typos, unhashable static
+                            defaults, non-static string flags (the
+                            compile-count bounds CI gates exist for).
+  RL002  bf16-accumulation  matmul/einsum/dot_general inside
+                            src/repro/kernels/** without an explicit
+                            preferred_element_type=jnp.float32 or fp32
+                            cast (the PR 4 absorbed-MLA drift bug).
+  RL003  deprecated-surface internal callers still using the deprecated
+                            `use_ref=`/`interpret=` op kwargs or the
+                            bare `plan_size=`/`thresholds=` loop/engine
+                            kwargs (PR 6/7 migrations).
+  RL004  stats-bypass       metric state mutated around the
+                            MetricsRegistry facades from PR 8 (private
+                            `_metrics` access, raw instrument
+                            construction, `.samples` rebinds).
+  RL005  trash-block        paged pool writes in models/attention.py /
+                            kernels/paged_attention/** outside the
+                            helpers that route pads to the trash block
+                            (the PR 3 review-hardening contract).
+  RL006  suppression-hygiene (meta) a `# repro-lint: disable=` comment
+                            with no justification, or matching no
+                            finding. Not itself suppressible.
+
+Suppression syntax — same line or the line above, justification
+REQUIRED after `--`:
+
+    foo()  # repro-lint: disable=RL002 -- oracle mirrors einsum dtype
+    # repro-lint: disable-next=RL003 -- exercises the deprecated path
+    bar()
+
+Suppressions ratchet against tools/analysis/suppressions.txt (the same
+pattern as tools/ci_check.py's seed-failure baseline): a new suppression
+must be banked with --update-baseline, and a baseline entry whose
+suppression disappeared fails as stale until trimmed the same way.
+
+Run locally:
+
+    python -m tools.analysis src tests benchmarks tools
+    python -m tools.analysis --list-rules
+"""
+from tools.analysis.core import main  # noqa: F401  (CLI entry re-export)

@@ -1,0 +1,6 @@
+"""`python -m tools.analysis` entry point."""
+import sys
+
+from tools.analysis.core import main
+
+sys.exit(main())

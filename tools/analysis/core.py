@@ -1,0 +1,386 @@
+"""repro-lint harness: file walking, suppressions, baseline, report, CLI.
+
+The rule implementations live in `tools/analysis/rules.py`; this module
+owns everything around them:
+
+  * walking the target paths (*.py files, skipping bytecode dirs),
+  * parsing `# repro-lint: disable=<RULE>[,<RULE>] -- <justification>`
+    (same line) and `# repro-lint: disable-next=...` (line above)
+    suppression comments and matching them against findings,
+  * RL006 suppression hygiene (a suppression must carry a justification
+    and must match at least one finding),
+  * the ratcheting suppression baseline (tools/analysis/suppressions.txt,
+    the `tools/ci_check.py` seed-failure pattern: unbanked suppressions
+    and stale baseline entries both fail; --update-baseline rewrites),
+  * the machine-readable findings report (repro_lint_report.json — a CI
+    artifact, never committed; tools/ci_check.py refuses it tracked).
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import io
+import json
+import os
+import re
+import sys
+import tokenize
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+DEFAULT_BASELINE = os.path.join("tools", "analysis", "suppressions.txt")
+REPORT_VERSION = 1
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*(disable(?:-next)?)\s*=\s*"
+    r"(RL\d{3}(?:\s*,\s*RL\d{3})*)"
+    r"(?:\s+--\s*(\S.*?))?\s*$"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str  # repo-relative posix path
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+@dataclasses.dataclass
+class Suppression:
+    rules: Tuple[str, ...]
+    target_line: int  # the source line the suppression covers
+    comment_line: int  # where the comment itself sits
+    justification: str
+    path: str
+    used_rules: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def used(self) -> bool:
+        return bool(self.used_rules)
+
+
+def _comment_tokens(source: str) -> List[Tuple[int, str]]:
+    """(line, text) for real COMMENT tokens — a suppression written
+    inside a string literal (e.g. this package's own docstring examples)
+    must NOT count. Falls back to raw-line scanning when the file does
+    not tokenize (the RL000 path still reports its suppressions)."""
+    try:
+        return [
+            (tok.start[0], tok.string)
+            for tok in tokenize.generate_tokens(io.StringIO(source).readline)
+            if tok.type == tokenize.COMMENT
+        ]
+    except (tokenize.TokenError, SyntaxError, IndentationError):
+        return [
+            (i, raw) for i, raw in enumerate(source.splitlines(), start=1)
+            if "#" in raw
+        ]
+
+
+def parse_suppressions(path: str, source: str) -> List[Suppression]:
+    out: List[Suppression] = []
+    for i, comment in _comment_tokens(source):
+        m = _SUPPRESS_RE.search(comment)
+        if m is None:
+            continue
+        kind, rules, just = m.group(1), m.group(2), m.group(3) or ""
+        out.append(
+            Suppression(
+                rules=tuple(r.strip() for r in rules.split(",")),
+                target_line=i + 1 if kind == "disable-next" else i,
+                comment_line=i,
+                justification=just.strip(),
+                path=path,
+            )
+        )
+    return out
+
+
+def iter_py_files(paths: Iterable[str]) -> List[str]:
+    """Expand files/directories into a sorted list of .py files."""
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p) and p.endswith(".py"):
+            out.append(p)
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(
+                d for d in dirs
+                if d != "__pycache__" and not d.startswith(".")
+            )
+            out.extend(
+                os.path.join(root, f) for f in sorted(files)
+                if f.endswith(".py")
+            )
+    return sorted(dict.fromkeys(os.path.normpath(f) for f in out))
+
+
+def _posix(path: str) -> str:
+    return path.replace(os.sep, "/")
+
+
+def lint_file(path: str, source: Optional[str] = None):
+    """Run every rule over one file.
+
+    Returns (live_findings, suppressed_findings, suppressions,
+    parse_error_finding_or_None)."""
+    from tools.analysis import rules as R
+
+    rel = _posix(os.path.relpath(path))
+    if source is None:
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+    lines = source.splitlines()
+    sups = parse_suppressions(rel, source)
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        bad = Finding(
+            "RL000", rel, e.lineno or 0, f"syntax error: {e.msg}"
+        )
+        return [bad], [], sups, bad
+
+    findings: List[Finding] = []
+    for _rid, _title, fn in R.ALL_RULES:
+        findings.extend(fn(rel, tree, lines))
+
+    by_line: Dict[int, List[Suppression]] = {}
+    for s in sups:
+        by_line.setdefault(s.target_line, []).append(s)
+
+    live: List[Finding] = []
+    suppressed: List[Finding] = []
+    for f in findings:
+        hit = None
+        for s in by_line.get(f.line, ()):
+            if f.rule in s.rules:
+                hit = s
+                break
+        if hit is None:
+            live.append(f)
+        else:
+            hit.used_rules.append(f.rule)
+            suppressed.append(f)
+
+    # RL006 suppression hygiene: justification required, and a
+    # suppression that matches nothing is stale noise. Neither is itself
+    # suppressible — fix the comment.
+    for s in sups:
+        if s.used and not s.justification:
+            live.append(Finding(
+                "RL006", rel, s.comment_line,
+                f"suppression of {','.join(sorted(set(s.used_rules)))} "
+                f"lacks a justification — append `-- <why>`",
+            ))
+        if not s.used:
+            live.append(Finding(
+                "RL006", rel, s.comment_line,
+                f"suppression of {','.join(s.rules)} matches no finding "
+                f"— delete the stale comment",
+            ))
+    return live, suppressed, sups, None
+
+
+def lint_paths(paths: Sequence[str]):
+    live: List[Finding] = []
+    suppressed: List[Finding] = []
+    sups: List[Suppression] = []
+    files = iter_py_files(paths)
+    for f in files:
+        lv, sp, su, _ = lint_file(f)
+        live.extend(lv)
+        suppressed.extend(sp)
+        sups.extend(su)
+    return live, suppressed, sups, files
+
+
+# ----------------------------------------------------------- baseline
+def suppression_counts(sups: Sequence[Suppression]) -> Dict[Tuple[str, str], int]:
+    """(path, rule) -> number of suppressed findings, USED entries only
+    (unused suppressions are RL006 findings, not bankable)."""
+    out: Dict[Tuple[str, str], int] = {}
+    for s in sups:
+        for r in s.used_rules:
+            out[(s.path, r)] = out.get((s.path, r), 0) + 1
+    return out
+
+
+def read_baseline(path: str) -> Dict[Tuple[str, str], int]:
+    """`<path> <rule> <count>` per line; '#' comments; missing file is an
+    empty baseline (every suppression then needs banking)."""
+    out: Dict[Tuple[str, str], int] = {}
+    if not os.path.exists(path):
+        return out
+    with open(path, encoding="utf-8") as f:
+        for raw in f:
+            line = raw.strip()
+            if not line or line.startswith("#"):
+                continue
+            parts = line.split()
+            if len(parts) != 3:
+                raise SystemExit(
+                    f"[repro-lint] malformed baseline line in {path}: {raw!r}"
+                )
+            out[(parts[0], parts[1])] = int(parts[2])
+    return out
+
+
+def write_baseline(path: str, counts: Dict[Tuple[str, str], int]) -> None:
+    header = (
+        "# repro-lint suppression baseline (the ratchet).\n"
+        "# One `<path> <rule> <count>` entry per file x rule with active,\n"
+        "# justified suppressions. Regenerate after adding or removing a\n"
+        "# suppression:  python -m tools.analysis src tests benchmarks \\\n"
+        "#                   tools --update-baseline\n"
+        "# Unbanked suppressions and stale entries both fail CI.\n"
+    )
+    body = "".join(
+        f"{p} {r} {n}\n" for (p, r), n in sorted(counts.items()) if n > 0
+    )
+    with open(path, "w", encoding="utf-8") as f:
+        f.write(header + body)
+
+
+def baseline_drift(
+    live: Dict[Tuple[str, str], int], base: Dict[Tuple[str, str], int]
+):
+    """Returns (unbanked, stale) lists of (path, rule, live_n, base_n)."""
+    unbanked, stale = [], []
+    for key in sorted(set(live) | set(base)):
+        ln, bn = live.get(key, 0), base.get(key, 0)
+        if ln > bn:
+            unbanked.append((*key, ln, bn))
+        elif ln < bn:
+            stale.append((*key, ln, bn))
+    return unbanked, stale
+
+
+# -------------------------------------------------------------- report
+def build_report(
+    paths: Sequence[str],
+    files: Sequence[str],
+    live: Sequence[Finding],
+    suppressed: Sequence[Finding],
+    sups: Sequence[Suppression],
+    baseline_path: str,
+    unbanked,
+    stale,
+) -> dict:
+    from tools.analysis import rules as R
+
+    def fd(f: Finding) -> dict:
+        return {"rule": f.rule, "path": f.path, "line": f.line,
+                "message": f.message}
+
+    counts: Dict[str, int] = {}
+    for f in live:
+        counts[f.rule] = counts.get(f.rule, 0) + 1
+    return {
+        "version": REPORT_VERSION,
+        "tool": "repro-lint",
+        "paths": list(paths),
+        "files_scanned": len(files),
+        "rules": {rid: title for rid, title, _ in R.ALL_RULES},
+        "finding_counts": counts,
+        "findings": [fd(f) for f in live],
+        "suppressed": [fd(f) for f in suppressed],
+        "suppressions": [
+            {
+                "path": s.path,
+                "line": s.comment_line,
+                "rules": list(s.rules),
+                "justification": s.justification,
+                "used": sorted(set(s.used_rules)),
+            }
+            for s in sups
+        ],
+        "baseline": baseline_path,
+        "baseline_unbanked": [list(x) for x in unbanked],
+        "baseline_stale": [list(x) for x in stale],
+        "clean": not live and not unbanked and not stale,
+    }
+
+
+# ------------------------------------------------------------------ CLI
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    from tools.analysis import rules as R
+
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analysis",
+        description="repro-lint: codebase-specific static analysis "
+                    "(rules RL001-RL005, suppression ratchet).",
+    )
+    ap.add_argument("paths", nargs="*", default=[],
+                    help="files or directories (default: src tests "
+                         "benchmarks tools)")
+    ap.add_argument("--report", metavar="FILE",
+                    help="write the machine-readable findings report "
+                         "(repro_lint_report.json in CI)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help=f"suppression baseline file (default "
+                         f"{DEFAULT_BASELINE})")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="skip the suppression ratchet (local spot runs)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline to the current justified "
+                         "suppressions (bank new ones, trim stale ones)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule table and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid, title, _ in R.ALL_RULES:
+            print(f"{rid}  {title}")
+        print("RL006  suppression-hygiene (meta; not suppressible)")
+        return 0
+
+    paths = args.paths or ["src", "tests", "benchmarks", "tools"]
+    live, suppressed, sups, files = lint_paths(paths)
+
+    unbanked, stale = [], []
+    if not args.no_baseline:
+        live_counts = suppression_counts(sups)
+        if args.update_baseline:
+            write_baseline(args.baseline, live_counts)
+            print(f"[repro-lint] baseline rewritten: {args.baseline} "
+                  f"({sum(live_counts.values())} suppression(s) banked)")
+        else:
+            unbanked, stale = baseline_drift(
+                live_counts, read_baseline(args.baseline)
+            )
+
+    if args.report:
+        rep = build_report(paths, files, live, suppressed, sups,
+                           args.baseline, unbanked, stale)
+        with open(args.report, "w", encoding="utf-8") as f:
+            json.dump(rep, f, indent=2, sort_keys=False)
+            f.write("\n")
+
+    for f in sorted(live, key=lambda f: (f.path, f.line, f.rule)):
+        print(f.render())
+    rc = 0
+    if live:
+        rc = 1
+    for path, rule, ln, bn in unbanked:
+        print(f"[repro-lint] FAIL: unbanked suppression {path} {rule} "
+              f"({ln} live vs {bn} banked) — justify it, then run "
+              f"--update-baseline and commit {args.baseline}")
+        rc = 1
+    for path, rule, ln, bn in stale:
+        print(f"[repro-lint] FAIL: stale baseline entry {path} {rule} "
+              f"({bn} banked vs {ln} live) — bank the cleanup: run "
+              f"--update-baseline and commit {args.baseline}")
+        rc = 1
+    n_sup = len(suppressed)
+    print(f"[repro-lint] {len(files)} files, {len(live)} finding(s), "
+          f"{n_sup} suppressed"
+          + ("" if rc else " — OK"))
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())
