@@ -37,6 +37,13 @@ differ (the nightly MoE kernel-parity gate) and records the pallas/ref
 tokens/s ratio; --min-moe-speedup gates it (0 on CPU, where interpret
 mode is slower; raise on TPU runners).
 
+Spec mode (--spec): replays the same seed-deterministic prompt set with
+speculative multi-token decode ON vs OFF in fp32, where the chunk-of-k
+verify path is token-exact against sequential decode. Gates fp32 token
+identity, acceptance rate > 0, and the spec/plain tokens/s ratio
+(--min-spec-speedup, acceptance >= 1.3x on the replayed trace); nightly
+also holds the committed speedup and ITL-p95 levels.
+
 Skew mode (--skew): saves/loads a skew-churn RequestTrace (Zipf token
 populations with a mid-stream phase shift, bursty arrivals) and
 replays it through the live loop three ways — an untimed
@@ -65,6 +72,8 @@ text.
   PYTHONPATH=src python benchmarks/serving_bench.py --prefix --smoke \
       --json BENCH_serving.json
   PYTHONPATH=src python benchmarks/serving_bench.py --moe --smoke \
+      --json BENCH_serving.json
+  PYTHONPATH=src python benchmarks/serving_bench.py --spec --smoke \
       --json BENCH_serving.json
 """
 from __future__ import annotations
@@ -119,6 +128,10 @@ SNAP_FIELDS = {
     "thrash_events": ("serving.thrash_events", 1.0, None),
     "plan_p95_ms": ("serving.plan_s.p95", 1e3, 2),
     "predictor_accuracy": ("serving.predictor_accuracy", 1.0, 3),
+    "spec_acceptance_rate": ("serving.spec_acceptance_rate", 1.0, 3),
+    "spec_steps": ("serving.spec_steps", 1.0, None),
+    "spec_drafted_tokens": ("serving.spec_drafted_tokens", 1.0, None),
+    "spec_accepted_tokens": ("serving.spec_accepted_tokens", 1.0, None),
 }
 
 
@@ -744,6 +757,192 @@ def run_moe(args) -> int:
     return rc
 
 
+# ---------------------------------------------------- speculative mode
+def run_spec(args) -> int:
+    """Speculative-decode replay: the same seed-deterministic prompt set
+    is served with `spec_decode=True` vs plain decode, in fp32 where the
+    chunk-of-k verify path is token-exact against sequential decode, so
+    the two streams must be IDENTICAL (any divergence is a verify/
+    rollback bug and the mode exits nonzero).
+
+    The spec loop's warmup wave RECORDS each request's greedy
+    continuation into the radix prefix index (free_slot indexes
+    prompt + generated[:-1]); a second untimed wave replays against the
+    warm radix so the wide verify-chunk shapes compile before timing.
+    The timed best-of-N replays then draft next tokens straight out of
+    the index (prompt-lookup over replayed traffic — the agentic/
+    templated-workload pattern), so the acceptance rate is high and
+    tokens/s must beat plain decode by --min-spec-speedup (the
+    perf acceptance gate). Acceptance stats come from
+    `MetricsRegistry.snapshot()` like every other serving metric;
+    nightly, the committed speedup and ITL-p95 levels are gated via
+    --baseline-json."""
+    import copy
+    import dataclasses
+
+    from repro.serving.loop import LoopStats
+    from repro.serving.spec_decode import DraftConfig
+
+    cfg = reduce_for_smoke(get_config(args.arch))
+    # fp32: verify == sequential decode token-exactly, so speculation
+    # cannot flip a greedy token and identity is a hard gate
+    cfg = dataclasses.replace(
+        cfg, param_dtype="float32", compute_dtype="float32"
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    import numpy as np
+
+    new_tokens = 16 if args.smoke else args.new_tokens
+    n_requests = 6 if args.smoke else args.requests
+    prompt_len = max(args.prompt_len, 12)
+    cache_len = prompt_len + new_tokens + 2
+    rng = np.random.default_rng(13)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+        for _ in range(n_requests)
+    ]
+
+    def make_reqs(wave):
+        # same prompt CONTENT every wave (the replay), fresh rids
+        return [
+            Request(rid=1000 * wave + i, prompt=p.copy(),
+                    max_new_tokens=new_tokens)
+            for i, p in enumerate(prompts)
+        ]
+
+    # pool sized so every request's recorded chain stays radix-resident
+    # across waves (n_requests chains + the live batch); the default
+    # batch-only pool LRU-evicts the chains the drafter reads and the
+    # replay degenerates to plain decode
+    blocks_per_slot = -(-cache_len // 4)
+    pool_blocks = (n_requests + args.spec_batch) * blocks_per_slot
+
+    def serve(spec):
+        loop = ServingLoop(
+            cfg, params, batch_size=args.spec_batch,
+            n_groups=args.spec_groups, cache_len=cache_len,
+            kv_pool_blocks=pool_blocks,
+            spec_decode=spec, spec_config=DraftConfig(k=args.spec_k),
+        )
+        # wave 0 compiles and records the continuations; wave 1 replays
+        # against the warm radix untimed (first radix hits widen the
+        # verify chunks — those shapes must compile OUTSIDE the timing)
+        for wave in (0, 1):
+            for r in make_reqs(wave):
+                loop.submit(r)
+            loop.run()
+        best, done, toks = None, 0, None
+        for rep in range(max(1, args.bench_repeats)):
+            loop.stats = LoopStats()
+            for r in make_reqs(2 + rep):
+                loop.submit(r)
+            finished = loop.run()
+            done = loop.stats.completed
+            if best is None or loop.stats.tokens_per_s > best.tokens_per_s:
+                best = loop.stats
+                toks = {r.rid % 1000: copy.deepcopy(r.generated)
+                        for r in finished}
+        return loop, best, done, toks
+
+    with CompileCounter() as cc:
+        loop_s, st_s, done_s, toks_s = serve(True)
+        loop_p, st_p, done_p, toks_p = serve(False)
+    speedup = st_s.tokens_per_s / max(st_p.tokens_per_s, 1e-9)
+    identical = toks_s == toks_p
+    acc = st_s.spec_acceptance_rate
+    eng = loop_s.engine
+    print(f"[serving_bench] spec replay: {n_requests} requests x "
+          f"{new_tokens} new tokens, prompt_len={prompt_len}, k="
+          f"{args.spec_k}, fp32")
+    print(f"[serving_bench] speculative: {st_s.summary()}")
+    print(f"[serving_bench] plain:       {st_p.summary()}")
+    print(f"[serving_bench] spec/plain tokens/s {speedup:.2f}x (floor "
+          f"{args.min_spec_speedup}x); acceptance {acc:.2f} "
+          f"({st_s.spec_accepted_tokens}/{st_s.spec_drafted_tokens}); "
+          f"tokens identical: {identical}")
+    print(f"[serving_bench] verify compiles: {eng.verify_compiles}; "
+          f"chunk widths: {sorted(eng.verify_widths)}; table widths: "
+          f"{sorted(eng.verify_table_widths)}; backend compiles: "
+          f"{cc.count}")
+
+    result = {
+        "arch": cfg.name,
+        "requests": n_requests,
+        "prompt_len": prompt_len,
+        "new_tokens": new_tokens,
+        "batch": args.spec_batch,
+        "groups": args.spec_groups,
+        "draft_k": args.spec_k,
+        "dtype": "float32",
+        **snap_serving(st_s, "tokens_per_s", "itl_p50_ms", "itl_p95_ms",
+                       "spec_acceptance_rate", "spec_steps",
+                       "spec_drafted_tokens", "spec_accepted_tokens"),
+        "tokens_per_s_plain": snap_serving(
+            st_p, "tokens_per_s")["tokens_per_s"],
+        "speedup": round(speedup, 2),
+        "tokens_identical": identical,
+        "verify_compiles": eng.verify_compiles,
+        "verify_chunk_widths": sorted(eng.verify_widths),
+        "verify_table_widths": sorted(eng.verify_table_widths),
+        "backend_compiles": cc.count,
+    }
+    # snapshot the committed baseline BEFORE (possibly) overwriting it
+    baseline = (
+        _baseline_entry(args.baseline_json, "spec")
+        if args.baseline_json else None
+    )
+    if args.json:
+        write_json(args.json, "spec", result)
+    write_prom(args.prom, st_s)
+
+    rc = 0
+    if done_s != n_requests or done_p != n_requests:
+        print(f"[serving_bench] FAIL: incomplete serve (spec {done_s}, "
+              f"plain {done_p} of {n_requests})")
+        rc = 1
+    if not identical:
+        diff = [rid for rid in toks_p if toks_s.get(rid) != toks_p[rid]]
+        print(f"[serving_bench] FAIL: fp32 token streams diverge between "
+              f"speculative and plain decode (requests {diff}) — the "
+              f"verify/accept/rollback path changed what the model "
+              f"commits")
+        rc = 1
+    if acc <= 0:
+        print("[serving_bench] FAIL: zero draft acceptance on a replayed "
+              "trace (the drafter or accept-prefix logic is inert)")
+        rc = 1
+    if speedup < args.min_spec_speedup:
+        print(f"[serving_bench] FAIL: spec speedup {speedup:.2f}x < floor "
+              f"{args.min_spec_speedup}x")
+        rc = 1
+    if args.baseline_json:
+        if baseline is None:
+            print(f"[serving_bench] note: no spec baseline in "
+                  f"{args.baseline_json}; gate skipped")
+        else:
+            # machine-relative: the spec/plain ratio measured in this
+            # run must hold the committed level
+            base_speedup = baseline.get("speedup")
+            if base_speedup is not None:
+                floor = args.baseline_frac * float(base_speedup)
+                ok = speedup >= floor
+                print(f"[serving_bench] {'ok' if ok else 'FAIL'}: spec "
+                      f"speedup {speedup:.2f}x vs baseline "
+                      f"{float(base_speedup):.2f}x (floor {floor:.2f}x = "
+                      f"{args.baseline_frac}x)")
+                rc = rc if ok else 1
+            base_itl = baseline.get("itl_p95_ms")
+            if base_itl is not None:
+                ceil = args.itl_slack * float(base_itl)
+                ok = st_s.itl_p95_s * 1e3 <= ceil
+                print(f"[serving_bench] {'ok' if ok else 'FAIL'}: itl_p95 "
+                      f"{st_s.itl_p95_s*1e3:.1f}ms vs baseline "
+                      f"{float(base_itl):.1f}ms (ceiling {ceil:.1f}ms = "
+                      f"{args.itl_slack}x)")
+                rc = rc if ok else 1
+    return rc
+
+
 # ------------------------------------------------------- skew-churn mode
 def run_skew(args) -> int:
     """Skew-churn replay: a saved RequestTrace (skewed, phase-shifting
@@ -1205,6 +1404,19 @@ def main(argv=None):
                     help="aggregated tokens/step for the simulator trace")
     ap.add_argument("--sim-steps", type=int, default=24)
     ap.add_argument("--sim-warmup", type=int, default=4)
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative-decode replay: the same prompt set "
+                         "served spec vs plain in fp32; gates token "
+                         "identity, acceptance > 0, and the spec/plain "
+                         "tokens/s ratio (>= --min-spec-speedup)")
+    ap.add_argument("--spec-batch", type=int, default=4)
+    ap.add_argument("--spec-groups", type=int, default=1)
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max draft tokens per decode step (the verify "
+                         "chunk is 1 + k wide before pow2 padding)")
+    ap.add_argument("--min-spec-speedup", type=float, default=1.3,
+                    help="required spec/plain tokens/s ratio in --spec "
+                         "on the replayed trace (acceptance: >= 1.3)")
     ap.add_argument("--prefix", action="store_true",
                     help="shared-system-prompt replay: gates prefix "
                          "hit-rate > 0, >= --min-speedup over no-reuse, "
@@ -1247,6 +1459,8 @@ def main(argv=None):
         return run_moe(args)
     if args.skew:
         return run_skew(args)
+    if args.spec:
+        return run_spec(args)
     return run_grid(args)
 
 

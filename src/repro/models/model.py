@@ -819,3 +819,94 @@ def prefill_paged(
     x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)
     logits = _logits(params, cfg, x_last)[:, 0]
     return logits, new_pools, new_states
+
+
+def decode_verify(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    pools: Params,
+    tables: jnp.ndarray,
+    past_len: jnp.ndarray,
+    token_mask: jnp.ndarray,
+    tiered: Params | None = None,
+    cold_capacity_frac: float = 0.25,
+):
+    """Speculative chunk-of-k verification against the paged cache.
+
+    Identical forward to `prefill_paged` — tokens [W, K] carry each
+    row's [sampled token, draft_1..draft_{k-1}] chunk at vector
+    positions past_len + [0..K), right-padded and masked per row by
+    `token_mask` (per-row draft counts differ) — but it keeps what
+    prefill throws away: the logits at EVERY chunk position (the accept
+    rule compares draft i against argmax of position i-1's logits) and
+    the per-layer expert counts (a verify step feeds the tier scheduler
+    exactly like the decode step it replaces). In fp32 the chunk-of-k
+    logits are bit-exact vs k sequential decode steps: decode is the
+    chunk-of-1 case of the same kernel family.
+
+    Returns (logits [W, K, V], new_pools, new_states, expert_counts).
+    """
+    b, s = tokens.shape
+    unrolled_idx, n_groups, period = stack_plan(cfg)
+    assert cfg.encdec is None, "paged verify does not support enc-dec"
+    x = embed(params["embed"], tokens)
+    past_len = jnp.asarray(past_len, jnp.int32)
+    tables = jnp.asarray(tables, jnp.int32)
+    positions = past_len[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+
+    def run_layer(p, sig, x, cache_pools, ts):
+        mixer, _ = sig
+        is_attn = mixer in ("attn", "mla")
+        x, _, counts, nc = apply_layer(
+            cfg, sig, p, x, positions, mode="full",
+            cache=cache_pools if is_attn else {},
+            tiered_state=ts, cold_capacity_frac=cold_capacity_frac,
+            token_mask=token_mask,
+            paged_tables=tables if is_attn else None,
+            paged_past_len=past_len if is_attn else None,
+        )
+        new_pool = {k: v for k, v in nc.items() if k in SEQ_CACHE_KEYS}
+        new_state = {k: v for k, v in nc.items() if k not in SEQ_CACHE_KEYS}
+        return x, new_pool, new_state, counts
+
+    new_pools: Params = {}
+    new_states: Params = {}
+    counts_all = []
+    for li in unrolled_idx:
+        sig = layer_signature(cfg, li)
+        ts = tiered.get(f"layer{li}") if tiered else None
+        x, npool, nstate, counts = run_layer(
+            params[f"layer{li}"], sig, x, pools[f"layer{li}"], ts
+        )
+        new_pools[f"layer{li}"] = npool
+        new_states[f"layer{li}"] = nstate
+        counts_all.append(counts)
+
+    tiered_stack = tiered.get("stack") if tiered else None
+
+    def body(x, inp):
+        p, pool_c, ts_stack = inp
+        np_, ns_ = {}, {}
+        cnts = []
+        for j, sig in enumerate(period):
+            ts = ts_stack.get(f"slot{j}") if ts_stack else None
+            x, npool, nstate, counts = run_layer(
+                p[f"slot{j}"], sig, x, pool_c[f"slot{j}"], ts
+            )
+            np_[f"slot{j}"] = npool
+            ns_[f"slot{j}"] = nstate
+            cnts.append(counts)
+        return x, (np_, ns_, jnp.stack(cnts))
+
+    x, (stack_pools, stack_states, counts) = jax.lax.scan(
+        body, x, (params["stack"], pools["stack"], tiered_stack or {})
+    )
+    new_pools["stack"] = stack_pools
+    new_states["stack"] = stack_states
+    logits = _logits(params, cfg, x)
+    e = cfg.moe.n_experts if cfg.moe is not None else 1
+    counts = counts.reshape(-1, e)
+    if counts_all:
+        counts = jnp.concatenate([jnp.stack(counts_all), counts], axis=0)
+    return logits, new_pools, new_states, counts

@@ -41,6 +41,7 @@ from repro.models.layers import Params
 from repro.models.model import (
     decode_step,
     decode_step_paged,
+    decode_verify,
     layer_signature,
     prefill,
     prefill_paged,
@@ -293,11 +294,26 @@ class TriMoEServingEngine:
             )
 
         self._prefill_paged = jax.jit(prefill_paged_fn)
+
+        # speculative verify: chunk-of-k through the SAME chunked paged
+        # kernels, but keeping every chunk position's logits + the
+        # expert counts (models.decode_verify)
+        def verify_paged_fn(p, toks, lens, past, tables, pools, ts):
+            mask = jnp.arange(toks.shape[1])[None, :] < lens[:, None]
+            return decode_verify(
+                p, cfg, toks, pools, tables, past, mask,
+                tiered=ts, cold_capacity_frac=cold_capacity_frac,
+            )
+
+        self._verify_paged = jax.jit(verify_paged_fn)
         self.prefill_rows = prefill_rows
         # (rows, bucket width, table width) fallback compile count
         self._prefill_shapes = set()
         self.decode_table_widths = set()  # distinct sliced widths (pow2)
         self.prefill_table_widths = set()  # paged prefill's sliced widths
+        self.verify_widths = set()  # pow2-padded chunk-of-k widths
+        self.verify_table_widths = set()  # verify's sliced table widths
+        self._verify_shapes = set()  # (chunk width, table width) fallback
         self._migrate = jax.jit(apply_migrations)
 
         # stacked tier buffers migrate in ONE fused jit: extract group g,
@@ -566,6 +582,97 @@ class TriMoEServingEngine:
             self.stats.prefills += nr
             self.stats.prefill_tokens += int(lens.sum())
         return out[0] if len(out) == 1 else jnp.concatenate(out)
+
+    def verify_slots_paged(self, chunks, slot_indices, lengths, past_len,
+                           live=None):
+        """Speculative chunk-of-k verification of the active zigzag
+        group against the paged pools.
+
+        chunks: [W, K] int32 — each row's [sampled token, draft_1..]
+        chunk, right-padded; lengths [W] real chunk tokens per row (a
+        row with no drafts verifies a chunk of 1 — exactly its plain
+        decode step); past_len [W] the rows' committed lengths before
+        the chunk. The caller must have `ensure_block`'d every chunk
+        position (ServingLoop._spec_step) — rejected positions are
+        rolled back afterwards via PagedKVCache.truncate.
+
+        Same compile accounting as decode/prefill: the chunk width pads
+        to pow2 (at most log2(k)+1 widths) and block tables slice to
+        the pow2 active width, so compiles are bounded by
+        n_chunk_widths x n_width_buckets (`verify_compiles`).
+
+        Returns (logits [W, Kp, V], expert_counts) — position i's
+        logits condition on chunk tokens 0..i and the cached prefix,
+        bit-exact vs sequential decode in fp32."""
+        from repro.kernels.paged_attention import active_block_width
+
+        assert isinstance(self.kv, PagedKVCache)
+        chunks = np.asarray(chunks, np.int32)
+        lengths = np.asarray(lengths, np.int32)
+        past_len = np.asarray(past_len, np.int32)
+        n, width = chunks.shape
+        assert len(slot_indices) == n
+        live = (
+            np.ones((n,), bool) if live is None else np.asarray(live, bool)
+        )
+        assert np.all(lengths[live] > 0) and np.all(lengths <= width)
+        kw = 1
+        while kw < width:
+            kw *= 2
+        toks = np.zeros((n, kw), np.int32)
+        toks[:, :width] = chunks
+        lens = np.where(live, lengths, 0).astype(np.int32)
+        past = np.where(live, past_len, 0).astype(np.int32)
+        end = int((past + lens).max()) if live.any() else 1
+        tw = active_block_width(
+            end - 1, self.kv.block_size, max(1, self.kv.blocks_per_slot)
+        )
+        self.verify_widths.add(kw)
+        self.verify_table_widths.add(tw)
+        self._verify_shapes.add((kw, tw))
+        # dead rows: all-trash tables + zero mask, like prefill pads
+        tables = np.full((n, tw), self.kv.trash, np.int32)
+        rows = self.kv.table_rows(slot_indices)[:, :tw]
+        tables[live] = rows[live]
+        if self.kv.sanitizer is not None:
+            # the chunk writes span [past, past+len) of each live row —
+            # every target block must be private; dead rows all-trash
+            bs = self.kv.block_size
+            bids, mask = [], []
+            for j in range(n):
+                if live[j]:
+                    lo = int(past[j]) // bs
+                    hi = -(-int(past[j] + lens[j]) // bs)
+                    span = tables[j, lo:hi]
+                else:
+                    span = tables[j]
+                bids.extend(span.tolist())
+                mask.extend([bool(live[j])] * len(span))
+            self.kv.sanitizer.check_scatter_targets(bids, mask)
+        logits, self.kv.pools, row_states, counts = self._verify_paged(
+            self.params, jnp.asarray(toks), jnp.asarray(lens),
+            jnp.asarray(past), jnp.asarray(tables), self.kv.pools,
+            self.tiered,
+        )
+        live_rows = [j for j in range(n) if live[j]]
+        if live_rows:  # dead rows must not clobber their slot state
+            sub = gather_slots(row_states, live_rows)
+            self.kv.slot_state = scatter_slots(
+                self.kv.slot_state, sub,
+                [int(slot_indices[j]) for j in live_rows],
+            )
+        self.stats.steps += 1
+        return logits, counts
+
+    @property
+    def verify_compiles(self) -> int:
+        """Distinct jit compiles of the speculative verify — bounded by
+        pow2 chunk widths x table-width buckets (the CI spec gate reads
+        this through serving_bench --spec)."""
+        try:
+            return int(self._verify_paged._cache_size())
+        except AttributeError:  # older jax: fall back to shape counting
+            return len(self._verify_shapes)
 
     @property
     def prefill_compiles(self) -> int:

@@ -79,6 +79,12 @@ class LoopStats(RegistryStats):
         "generated_tokens": (
             "tokens", "sampled tokens (prefill firsts + decode)"),
         "util_samples": ("samples", "slot-utilization samples taken"),
+        # --- speculative decode (serving/spec_decode.py)
+        "spec_steps": ("steps", "decode steps that verified >= 1 draft"),
+        "spec_drafted_tokens": (
+            "tokens", "draft tokens proposed for verification"),
+        "spec_accepted_tokens": (
+            "tokens", "draft tokens accepted by the verify chunk"),
         # --- scheduler observability (SchedulerPolicy surface)
         "replans": ("passes", "plan_migrations passes drawn by this loop"),
         "migrations": ("moves", "expert moves those passes emitted"),
@@ -111,6 +117,9 @@ class LoopStats(RegistryStats):
             ("serving.migrations_per_replan",
              lambda: self.migrations_per_replan, "",
              "expert moves per replan pass"),
+            ("serving.spec_acceptance_rate",
+             lambda: self.spec_acceptance_rate, "",
+             "accepted / proposed draft tokens"),
         ):
             self.registry.derived(name, fn, unit=unit, desc=desc,
                                   source="LoopStats")
@@ -122,6 +131,12 @@ class LoopStats(RegistryStats):
     @property
     def migrations_per_replan(self) -> float:
         return self.migrations / max(self.replans, 1)
+
+    @property
+    def spec_acceptance_rate(self) -> float:
+        """Fraction of proposed draft tokens the verify chunk accepted;
+        exactly 0.0 before any drafting (no division by zero)."""
+        return self.spec_accepted_tokens / max(self.spec_drafted_tokens, 1)
 
     @property
     def plan_p50_s(self) -> float:
@@ -171,6 +186,8 @@ class LoopStats(RegistryStats):
             f"itl_p95={self.itl_p95_s * 1e3:.0f}ms, "
             f"decode_steps={self.decode_steps} idle_steps={self.idle_steps} "
             f"prefill_chunks={self.prefill_chunks}, "
+            f"spec_acc={self.spec_acceptance_rate:.2f} "
+            f"({self.spec_accepted_tokens}/{self.spec_drafted_tokens}), "
             f"replans={self.replans} "
             f"migrations={self.migrations} "
             f"({self.migrations_per_replan:.1f}/replan) "
@@ -250,6 +267,24 @@ class ServingLoop:
     and the contiguous `kv_layout="slots"` fall back to whole-suffix
     admission prefill.
 
+    SPECULATIVE DECODE (`spec_decode=True`, serving/spec_decode.py):
+    each decode step drafts up to `spec_config.k` tokens per live slot
+    (prompt-lookup: radix prefix index first, per-slot suffix n-grams
+    second — no draft model, no RNG) and verifies the chunk
+    [sampled token, drafts...] through the SAME chunked paged kernels
+    as one `engine.verify_slots_paged` call. The greedy accept-prefix
+    rule commits every draft that matches the verify argmax plus one
+    bonus token; rejected suffixes roll back via
+    `PagedKVCache.truncate` (refcount/COW-aware, sanitizer-validated).
+    Greedy token streams are IDENTICAL to non-speculative serving at
+    fp32: a chunk of 1 is bitwise the decode step (same kernel) and
+    wider chunks agree to fp32 rounding with exactly equal argmax
+    tokens; throughput multiplies by the acceptance rate on
+    repetitive/replayed traffic.
+    Requires the paged layout + an attention-only arch (same gate as
+    chunked prefill). Acceptance stats land on the shared registry
+    (`serving.spec_*`, `serving.spec_acceptance_rate`).
+
     OBSERVABILITY (repro.obs): `obs=` accepts an `Observability` (share
     a registry/tracer) or an `ObsConfig`, resolved with the same
     precedence rule as `scheduler=`: explicit kwarg > `cfg.obs` >
@@ -286,6 +321,8 @@ class ServingLoop:
         moe_backend: Optional[str] = None,
         chunked_prefill: bool = True,
         prefill_chunk_tokens: Optional[int] = None,
+        spec_decode: bool = False,
+        spec_config=None,  # DraftConfig | None (serving/spec_decode.py)
         scheduler: Optional[SchedulerPolicy] = None,
         obs=None,  # Observability | ObsConfig | None (repro.obs)
     ):
@@ -361,6 +398,24 @@ class ServingLoop:
             prefill_chunk_tokens = 32
         assert prefill_chunk_tokens >= 1
         self.prefill_chunk_tokens = prefill_chunk_tokens
+        # speculative multi-token decode: verify-through-the-chunked-
+        # kernels needs the paged layout and a token-position-
+        # addressable cache for every mixer (same gate as chunked
+        # prefill — truncate cannot roll back recurrent state)
+        self.spec = bool(spec_decode)
+        if self.spec:
+            assert self.paged and prefix_cacheable(cfg), (
+                "spec_decode requires kv_layout='paged' and an "
+                "attention-only arch (chunk-of-k verification and "
+                "rollback go through the paged block pools)"
+            )
+            from repro.serving.spec_decode import PromptLookupDrafter
+
+            self.drafter = PromptLookupDrafter(
+                spec_config, radix=self.kv.radix
+            )
+        else:
+            self.drafter = None
         self.stats = LoopStats(self.obs.registry)
         self.completions: List[Request] = []
         self._t_admit: Dict[int, float] = {}
@@ -394,6 +449,8 @@ class ServingLoop:
             return
         for i in freed:
             r = self._slot_req.pop(i, None)
+            if self.drafter is not None:
+                self.drafter.free_slot(i)
             # index prompt + generated[:-1]: the FINAL sampled token was
             # never fed back through decode, so its K/V does not exist —
             # a block "completed" by it must not enter the radix
@@ -420,6 +477,8 @@ class ServingLoop:
                 # prefix, allocate fresh blocks for the uncached rest
                 past_len[i] = self.kv.admit_slot(i, r.prompt)
                 self._slot_req[i] = r
+                if self.drafter is not None:
+                    self.drafter.begin_slot(i, r.prompt)
             else:
                 self.kv.claim(i)
             self._t_admit[r.rid] = time.time()
@@ -480,7 +539,9 @@ class ServingLoop:
             else:
                 logits = self.engine.prefill_slots(prompts, slots, lengths=lengths)
             for row, i in enumerate(slots):
-                self._record_first(self.batcher.slots[i].request, logits[row])
+                self._record_first(
+                    self.batcher.slots[i].request, logits[row], slot=i
+                )
 
     def _prefill_step(self) -> None:
         """Run at most ONE budgeted chunk call of pending piggyback
@@ -535,14 +596,18 @@ class ServingLoop:
                 # index the freshly computed prompt blocks so later
                 # (and queued) admissions can share them
                 self.kv.commit_prompt(t.slot, t.req.prompt)
-                self._record_first(t.req, logits[row])
+                self._record_first(t.req, logits[row], slot=t.slot)
             else:
                 unfinished.append(t)
         # rows is a prefix of the task queue; rotate its survivors back
         self._prefill_tasks = self._prefill_tasks[len(rows):] + unfinished
 
-    def _record_first(self, r: Request, row_logits) -> None:
-        r.generated.append(int(np.asarray(jnp.argmax(row_logits, -1))))
+    def _record_first(self, r: Request, row_logits,
+                      slot: Optional[int] = None) -> None:
+        tok = int(np.asarray(jnp.argmax(row_logits, -1)))
+        r.generated.append(tok)
+        if self.drafter is not None and slot is not None:
+            self.drafter.extend(slot, [tok])
         self.stats.generated_tokens += 1
         now = time.time()
         t0 = self._t_submit.get(r.rid, self._t_admit.get(r.rid))
@@ -640,6 +705,10 @@ class ServingLoop:
                 self._flush_replan()
                 return
             _, idxs, toks, pos, live = gb
+            if self.spec:
+                with tr.span("decode"):
+                    self._spec_step(idxs, toks, pos, live)
+                return
             with tr.span("decode"):
                 if self.paged:
                     for row, i in enumerate(idxs):
@@ -671,6 +740,95 @@ class ServingLoop:
                 if prev is not None:
                     self.stats.itl_s.append(now - prev)
                 self._t_last_tok[rid] = now
+
+    def _spec_step(self, idxs, toks, pos, live) -> None:
+        """Speculative decode of one zigzag group: draft per slot,
+        verify all chunks in ONE chunk-of-k engine call, greedy
+        accept-prefix, rollback rejected tails.
+
+        Per live row the chunk is [this step's input token, draft_1..]:
+        position i's verify logits condition on chunk tokens 0..i plus
+        the cached prefix, so argmax at position i is EXACTLY what
+        sequential greedy decode would sample after draft i — comparing
+        it against draft i+1 (accept-prefix) and committing the first
+        mismatch position's argmax as the bonus token reproduces the
+        sequential stream token-for-token (a row with no drafts is the
+        chunk-of-1 case, i.e. a plain decode step). Accepted positions
+        keep the K/V the verify scattered; rejected tails roll back via
+        `PagedKVCache.truncate` (block refs dropped, shared/radix tail
+        COW-detached) so the next step's scatter targets stay clean."""
+        st = self.stats
+        tr = self._tr
+        drafts: List[List[int]] = [[] for _ in idxs]
+        with tr.span("spec.draft", cat="spec"):
+            for row, i in enumerate(idxs):
+                if not live[row]:
+                    continue
+                r = self.batcher.slots[i].request
+                # cap: the commit may add at most `remaining` tokens
+                # (accepted drafts + bonus), and every chunk position
+                # must fit the slot's block table
+                cap = min(
+                    r.max_new_tokens - len(r.generated) - 1,
+                    self.kv.seq_len - 1 - int(pos[row]),
+                )
+                if cap > 0:
+                    drafts[row] = self.drafter.draft(i, cap)
+        n_drafted = sum(len(d) for d in drafts)
+        width = 1 + max(len(d) for d in drafts)
+        chunk = np.zeros((len(idxs), width), np.int32)
+        lens = np.zeros((len(idxs),), np.int32)
+        for row, i in enumerate(idxs):
+            if not live[row]:
+                continue
+            row_toks = [int(toks[row, 0])] + drafts[row]
+            chunk[row, : len(row_toks)] = row_toks
+            lens[row] = len(row_toks)
+            for p in range(int(pos[row]), int(pos[row]) + len(row_toks)):
+                # on-demand alloc + COW for every chunk position (the
+                # same contract as plain decode, k+1 positions at once)
+                self.kv.ensure_block(i, p)
+        with tr.span("spec.verify", cat="spec"):
+            logits, counts = self.engine.verify_slots_paged(
+                chunk, idxs, lens, pos, live=live
+            )
+            # zigzag overlap, exactly like the plain decode step
+            self._flush_replan()
+            self._pending_counts = counts
+            nxt = np.asarray(jnp.argmax(logits, -1))  # [W, Kp]
+        st.decode_steps += 1
+        if n_drafted:
+            st.spec_steps += 1
+            st.spec_drafted_tokens += n_drafted
+        now = time.time()
+        for row, i in enumerate(idxs):
+            if not live[row]:
+                continue
+            r = self.batcher.slots[i].request
+            d = drafts[row]
+            a = 0
+            while a < len(d) and int(nxt[row, a]) == d[a]:
+                a += 1
+            commit = d[:a] + [int(nxt[row, a])]
+            st.spec_accepted_tokens += a
+            # multi-token commit: extend the request + slot cursor by
+            # hand (ZigzagBatcher.record is one-token), then roll the
+            # cache back to the committed length — the bonus token's
+            # K/V does not exist yet, exactly as after a plain step
+            r.generated.extend(commit)
+            self.batcher.slots[i].pos += len(commit)
+            self.kv.truncate(i, int(pos[row]) + len(commit))
+            self.drafter.extend(i, commit)
+            st.generated_tokens += len(commit)
+            rid = r.rid
+            prev = self._t_last_tok.get(rid)
+            if prev is not None:
+                # spread the step's gap over its committed tokens so
+                # ITL percentiles stay comparable with plain decode
+                gap = (now - prev) / len(commit)
+                for _ in commit:
+                    st.itl_s.append(gap)
+            self._t_last_tok[rid] = now
 
     def finish(self) -> None:
         """Settle all deferred scheduling work (observe + plan + apply)

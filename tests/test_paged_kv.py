@@ -364,6 +364,64 @@ def test_copy_on_write_preserves_shared_reader():
     assert kv.stats.cow_copies == 1
 
 
+def test_truncate_frees_tail_blocks_at_last_reference():
+    """Speculative rollback: dropping the rejected tail releases whole
+    blocks only when this slot held the last reference, and a kept
+    partial tail stays in place when private."""
+    cfg, kv = _mini_kv()
+    prompt = np.arange(9, dtype=np.int32)
+    kv.admit_slot(0, prompt)  # 3 blocks, length 9
+    used = [int(b) for b in kv.tables[0] if b != kv.trash]
+    for pos in range(9, 14):  # grow to 14 tokens = 4 blocks
+        kv.ensure_block(0, pos)
+    assert kv.blocks_in_use == 4
+    kv.truncate(0, 9)  # tail block rc==1, unindexed: back to the pool
+    assert int(kv.lengths[0]) == 9
+    assert kv.blocks_in_use == 3
+    assert [int(b) for b in kv.tables[0] if b != kv.trash] == used
+    kv.truncate(0, 9)  # no-op truncate is safe
+    assert kv.blocks_in_use == 3
+    kv.truncate(0, 6)  # within-block: private partial tail kept as-is
+    assert int(kv.lengths[0]) == 6
+    assert kv.blocks_in_use == 2
+    assert [int(b) for b in kv.tables[0] if b != kv.trash] == used[:2]
+    kv.truncate(0, 0)  # full rollback keeps the slot claimed
+    assert kv.blocks_in_use == 0
+    assert all(b == kv.trash for b in kv.tables[0])
+    kv.free_slot(0)
+    assert kv.n_free == 2
+
+
+def test_truncate_shared_and_radix_tails_cow_detach():
+    """A kept partial tail block that other readers (or the radix
+    index's immutable chunk) still see is detached by copy-on-write:
+    later decode writes land at positions >= n inside it."""
+    cfg, kv = _mini_kv()
+    prompt = np.arange(9, dtype=np.int32)
+    kv.admit_slot(0, prompt)
+    kv.commit_prompt(0, prompt)
+    kv.admit_slot(1, prompt)  # shares both full prompt blocks
+    shared = [int(b) for b in kv.tables[0][:2]]
+    assert [int(b) for b in kv.tables[1][:2]] == shared
+    before = kv.stats.cow_copies
+    kv.truncate(1, 6)  # partial tail inside shared block 1
+    assert int(kv.lengths[1]) == 6
+    assert int(kv.tables[1][0]) == shared[0]  # full block: still shared
+    assert int(kv.tables[1][1]) != shared[1]  # partial tail: detached
+    assert kv.refcount[shared[1]] == 1  # slot 0 keeps the original
+    assert kv.stats.cow_copies == before + 1
+    kv.free_slot(1)
+    # sole-reference but RADIX-INDEXED tail: must also detach, and the
+    # original stays radix-reclaimable at refcount 0 (not on the free
+    # list — eviction owns it)
+    kv.truncate(0, 7)
+    assert int(kv.tables[0][1]) != shared[1]
+    assert kv.refcount[shared[1]] == 0
+    assert shared[1] in kv.radix
+    assert shared[1] not in kv._free
+    kv.free_slot(0)
+
+
 def test_prefix_cacheable_gating():
     assert prefix_cacheable(reduce_for_smoke(get_config(GQA_ARCH)))
     assert prefix_cacheable(reduce_for_smoke(get_config(MLA_ARCH)))

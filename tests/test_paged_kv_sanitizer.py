@@ -140,6 +140,53 @@ def test_live_row_into_shared_block_raises(cfg):
     assert exc.value.kind == "shared_write"
 
 
+# ------------------------------- planted bug 4: speculative rollback
+def test_truncate_double_free_raises(cfg):
+    kv = make_kv(cfg)
+    kv.admit_slot(0, list(range(1, BS + 3)))  # 2 blocks
+    tail = int(kv.tables[0, 1])
+    kv.refcount[tail] = 0  # planted: the tail was already released
+    with pytest.raises(SanitizerError) as exc:
+        kv.truncate(0, BS)
+    assert exc.value.kind == "double_free"
+    assert exc.value.block == tail
+
+
+def test_truncate_refcount_tamper_raises(cfg):
+    kv = make_kv(cfg)
+    kv.admit_slot(0, list(range(1, 2 * BS + 2)))  # 3 blocks
+    bid = int(kv.tables[0, 0])
+    kv.refcount[bid] += 1  # planted corruption, swept by the rollback
+    with pytest.raises(SanitizerError) as exc:
+        kv.truncate(0, BS)
+    assert exc.value.kind == "refcount_mismatch"
+    assert exc.value.block == bid
+
+
+def test_truncate_skipped_tail_cow_caught_at_next_write(cfg, monkeypatch):
+    kv = make_kv(cfg)
+    shared = shared_pair(kv)
+    # the bug: rollback keeps a shared partial tail without detaching
+    monkeypatch.setattr(
+        PagedKVCache, "copy_on_write", lambda self, slot, lb: shared
+    )
+    kv.truncate(1, BS - 1)  # silently leaves block 0 shared
+    with pytest.raises(SanitizerError) as exc:
+        kv.ensure_block(1, BS - 1)  # the next decode write trips it
+    assert exc.value.kind == "shared_write"
+    assert exc.value.block == shared
+    assert exc.value.slot == 1
+
+
+def test_honest_truncate_keeps_next_write_clean(cfg):
+    kv = make_kv(cfg)
+    shared = shared_pair(kv)
+    kv.truncate(1, BS - 1)  # real COW path detaches the tail
+    kv.ensure_block(1, BS - 1)  # and the next write passes the sweep
+    assert int(kv.tables[1, 0]) != shared
+    assert kv.refcount[shared] == 1
+
+
 # ------------------------------------------------ broader sweep teeth
 def test_freed_block_left_in_table_raises(cfg):
     kv = make_kv(cfg)

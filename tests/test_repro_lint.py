@@ -238,6 +238,65 @@ def test_rl005_scoped_to_paged_modules():
     assert live == []
 
 
+# ---------------------------------------------------------------- RL007
+def test_rl007_unseeded_rng_flagged():
+    live, _, _ = lint_src(
+        """
+        import random
+        import numpy as np
+
+        def a():
+            return np.random.default_rng()
+
+        def b():
+            return random.Random()
+
+        def c():
+            return np.random.randint(0, 10)
+
+        def d(xs):
+            random.shuffle(xs)
+            return random.random()
+        """,
+        path="benchmarks/x_bench.py",
+    )
+    assert rules_of(live) == ["RL007"]
+    assert len(live) == 5
+
+
+def test_rl007_seeded_and_generator_calls_clean():
+    live, _, _ = lint_src(
+        """
+        import random
+        import numpy as np
+        import jax
+
+        def a(seed):
+            rng = np.random.default_rng(seed)
+            x = rng.random()          # generator method, not the module
+            y = rng.integers(0, 4)
+            return x, y, np.random.default_rng(0)
+
+        def b(seed):
+            r = random.Random(seed)
+            return r.random(), np.random.RandomState(7)
+
+        def c(key):
+            return jax.random.normal(key, (4,))  # keyed, not global
+        """,
+        path="tests/test_x.py",
+    )
+    assert live == []
+
+
+def test_rl007_scoped_to_shipped_trees():
+    live, _, _ = lint_src(
+        "import numpy as np\n\ndef f():\n    return np.random.default_rng()\n",
+        path="scripts/scratch.py",
+    )
+    assert live == []
+
+
 # --------------------------------------------- suppressions and RL006
 def test_suppression_with_justification_suppresses():
     live, suppressed, sups = lint_src(
@@ -356,5 +415,7 @@ def test_repo_tree_is_clean():
 
 def test_rule_table_complete():
     ids = [rid for rid, _, _ in rules.ALL_RULES]
-    assert ids == ["RL001", "RL002", "RL003", "RL004", "RL005"]
+    # RL006 (suppression hygiene) is the meta rule in core.py, not a
+    # per-file AST rule — hence the gap
+    assert ids == ["RL001", "RL002", "RL003", "RL004", "RL005", "RL007"]
     assert all(callable(fn) for _, _, fn in rules.ALL_RULES)

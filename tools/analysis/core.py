@@ -312,7 +312,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m tools.analysis",
         description="repro-lint: codebase-specific static analysis "
-                    "(rules RL001-RL005, suppression ratchet).",
+                    "(rules RL001-RL007, suppression ratchet).",
     )
     ap.add_argument("paths", nargs="*", default=[],
                     help="files or directories (default: src tests "

@@ -436,10 +436,80 @@ def rl005(path: str, tree: ast.AST, lines: Sequence[str]) -> List[Finding]:
     return out
 
 
+# ---------------------------------------------------- RL007 unseeded RNG
+# (RL006 is the suppression-hygiene meta rule, implemented in core.py.)
+# Replay determinism is a repo contract: identity gates (spec-vs-plain,
+# warm-vs-cold, dynamic-vs-static) replay the SAME token streams across
+# runs, and the speculative drafter must propose the same drafts every
+# time. Unseeded RNG — `default_rng()` with no seed, `random.Random()`,
+# or the process-global `np.random.*` / `random.*` samplers — breaks
+# that silently and only on the runs you didn't save.
+_RL007_GLOBAL_NP = {
+    "rand", "randn", "randint", "random", "random_sample", "ranf",
+    "sample", "choice", "shuffle", "permutation", "uniform", "normal",
+    "standard_normal", "integers", "bytes", "beta", "binomial",
+    "exponential", "gamma", "geometric", "poisson", "zipf",
+}
+_RL007_GLOBAL_RANDOM = {
+    "random", "randint", "randrange", "getrandbits", "choice", "choices",
+    "shuffle", "sample", "uniform", "triangular", "betavariate",
+    "expovariate", "gammavariate", "gauss", "lognormvariate",
+    "normalvariate", "vonmisesvariate", "paretovariate",
+    "weibullvariate", "randbytes",
+}
+_RL007_SEEDED_CTORS = {
+    "np.random.RandomState", "numpy.random.RandomState", "RandomState",
+    "random.Random", "Random",
+}
+
+
+def rl007(path: str, tree: ast.AST, lines: Sequence[str]) -> List[Finding]:
+    if not path.startswith(("src/", "tests/", "benchmarks/")):
+        return []
+    out: List[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted(node.func)
+        if not d:
+            continue
+        module, _, fn = d.rpartition(".")
+        if fn == "default_rng" and not node.args and not node.keywords:
+            out.append(Finding(
+                "RL007", path, node.lineno,
+                "default_rng() without a seed draws OS entropy — replay "
+                "determinism is a repo contract (identity gates, the "
+                "spec-decode drafter); pass an explicit seed",
+            ))
+        elif d in _RL007_SEEDED_CTORS and not node.args and not node.keywords:
+            out.append(Finding(
+                "RL007", path, node.lineno,
+                f"{fn}() without a seed is nondeterministic across runs "
+                f"— pass an explicit seed",
+            ))
+        elif module in ("np.random", "numpy.random") and \
+                fn in _RL007_GLOBAL_NP:
+            out.append(Finding(
+                "RL007", path, node.lineno,
+                f"process-global np.random.{fn}() depends on hidden "
+                f"interpreter-wide state — use a seeded "
+                f"np.random.default_rng(seed) generator",
+            ))
+        elif module == "random" and fn in _RL007_GLOBAL_RANDOM:
+            out.append(Finding(
+                "RL007", path, node.lineno,
+                f"process-global random.{fn}() depends on hidden "
+                f"interpreter-wide state — use a seeded random.Random("
+                f"seed) (or a numpy generator)",
+            ))
+    return out
+
+
 ALL_RULES: List[Tuple[str, str, object]] = [
     ("RL001", "recompile-hazard", rl001),
     ("RL002", "bf16-accumulation", rl002),
     ("RL003", "deprecated-surface", rl003),
     ("RL004", "stats-bypass", rl004),
     ("RL005", "trash-block-contract", rl005),
+    ("RL007", "unseeded-rng", rl007),
 ]
